@@ -1,0 +1,82 @@
+"""Paper Tables II/III analog: application-level error for the AxBench-in-JAX
+suite under Original/FxP/NoSwap/SWAPPER(Comp)/SWAPPER(App)/Theoretical, for a
+set of non-commutative mul16s circuits, in the MD+LO (and optionally ALL)
+configuration of Eq. 6."""
+from __future__ import annotations
+
+import time
+
+import repro.apps as A
+import repro.core as C
+
+DEFAULT_MULTS = ["mul16s_drum5_8", "mul16s_bam_v4_h1", "mul16s_mitch10_13"]
+FULL_MULTS = DEFAULT_MULTS + ["mul16s_trunc0_8", "mul16s_trunc1_9"]
+
+_N = {"ssim": 64, "are": 256, "miss_rate": 256}
+TEST_SEED, TRAIN_SEED = 1234, 42
+
+
+def run(quick: bool = False, full: bool = False, parts_list=None):
+    mults = FULL_MULTS if full else DEFAULT_MULTS
+    apps = sorted(A.ALL_APPS) if not quick else ["sobel", "inversek2j"]
+    parts_list = parts_list or [C.PART_MD_LO] + ([C.PART_ALL] if full else [])
+    if quick:
+        mults = mults[:1]
+
+    comp_best = {}
+    for mname in mults:
+        res = C.component_sweep(C.get(mname), tile=128, sample_bits=9)
+        comp_best[mname] = res.best("mae")
+
+    rows = []
+    t_all = time.time()
+    for app_name in apps:
+        app = A.ALL_APPS[app_name]
+        n = _N[app.metric_name] if not quick else 48
+        v_fp, _ = A.evaluate(app, "fp", n=n, seed=TEST_SEED)
+        v_fxp, _ = A.evaluate(app, "fxp", n=n, seed=TEST_SEED)
+        for parts in parts_list:
+            pname = "ALL" if parts == C.PART_ALL else "MD_LO"
+            if app.kind == "int16" and parts == C.PART_ALL:
+                continue  # jpeg has a single (direct mul16s) configuration
+            for mname in mults:
+                mult = C.get(mname)
+                v_nosw, _ = A.evaluate(app, None, mult=mult, parts=parts, n=n, seed=TEST_SEED)
+                v_comp, _ = A.evaluate(app, comp_best[mname], mult=mult, parts=parts,
+                                       n=n, seed=TEST_SEED)
+                cfg_app, _, _ = A.tune_app(app, mult, parts=parts, n=n, seed=TRAIN_SEED)
+                v_app, _ = A.evaluate(app, cfg_app, mult=mult, parts=parts, n=n,
+                                      seed=TEST_SEED)
+                v_theor, _ = A.evaluate(app, "oracle", mult=mult, parts=parts, n=n,
+                                        seed=TEST_SEED)
+                rows.append(dict(
+                    app=app_name, metric=app.metric_name, minimize=app.minimize,
+                    parts=pname, mult=mname, original=v_fp, fxp=v_fxp,
+                    noswap=v_nosw, swapper_comp=v_comp, swapper_app=v_app,
+                    theoretical=v_theor,
+                    app_cfg=(cfg_app.short() if cfg_app else "NoSwap"),
+                ))
+    return {"rows": rows, "total_s": time.time() - t_all}
+
+
+def format_table(out) -> str:
+    lines = ["Application-level — Tables II/III analog"]
+    cur = None
+    for r in out["rows"]:
+        hdr = (r["app"], r["parts"])
+        if hdr != cur:
+            cur = hdr
+            arrow = "lower is better" if r["minimize"] else "higher is better"
+            lines.append(f"\n[{r['app']} / {r['parts']}] metric={r['metric']} ({arrow}) "
+                         f"original={r['original']:.4f} fxp={r['fxp']:.4f}")
+            lines.append(f"  {'mult':22s} {'NoSwap':>9s} {'Comp.':>9s} {'App.':>9s} "
+                         f"{'Theor.':>9s}  app-cfg")
+        lines.append(
+            f"  {r['mult']:22s} {r['noswap']:9.4f} {r['swapper_comp']:9.4f} "
+            f"{r['swapper_app']:9.4f} {r['theoretical']:9.4f}  {r['app_cfg']}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_table(run()))

@@ -1,0 +1,61 @@
+"""Paper Table I analog: component-level MAE (original), SWAPPER best
+single-bit reduction, and the theoretical (oracle) bound, over the multiplier
+library at 8/12/16 bits, signed/unsigned, with commutative controls."""
+from __future__ import annotations
+
+import time
+
+import repro.core as C
+
+# representative set: non-commutative members + commutative controls
+MULTS_8 = ["mul8u_trunc0_4", "mul8u_trunc2_4", "mul8u_perf0_1", "mul8u_bam_v2_h1",
+           "mul8u_mitch13_0", "mul8u_drum3_4", "mul8u_drum2_6",
+           "mul8s_trunc0_4", "mul8s_bam_v2_h1", "mul8s_drum3_4",
+           "mul8u_trunc2_2", "mul8u_drum4_4"]           # last two commutative
+MULTS_12 = ["mul12u_trunc0_6", "mul12u_bam_v3_h1", "mul12u_drum4_6",
+            "mul12s_trunc1_7", "mul12s_mitch10_13"]
+MULTS_16 = ["mul16u_trunc0_8", "mul16u_drum2_14", "mul16s_trunc0_8",
+            "mul16s_bam_v4_h1", "mul16s_drum5_8", "mul16s_mitch10_13",
+            "mul16s_trunc4_4"]                           # last commutative
+
+
+def run(metric: str = "mae", quick: bool = False):
+    rows = []
+    t_all = time.time()
+    sets = [(MULTS_8, None), (MULTS_12, None), (MULTS_16, 10 if not quick else 8)]
+    if quick:
+        sets = [(MULTS_8[:4], None), (MULTS_16[:2], 8)]
+    for mults, sample_bits in sets:
+        for name in mults:
+            m = C.get(name)
+            t0 = time.time()
+            res = C.component_sweep(m, tile=256, sample_bits=sample_bits)
+            dt = time.time() - t0
+            best = res.best(metric)
+            rows.append(dict(
+                mult=name,
+                commutative=bool(m.commutative) if m.commutative is not None else None,
+                original=res.noswap.metric(metric),
+                swapper_reduction=res.reduction(metric),
+                theoretical_reduction=res.theoretical_reduction(metric),
+                best_cfg=best.short(),
+                exhaustive=sample_bits is None,
+                seconds=dt,
+            ))
+    return {"rows": rows, "metric": metric, "total_s": time.time() - t_all}
+
+
+def format_table(out) -> str:
+    lines = [f"Component-level ({out['metric'].upper()}) — Table I analog",
+             f"{'multiplier':22s} {'orig':>12s} {'SWAPPER':>9s} {'Theor.':>9s}  best-bit  comm"]
+    for r in out["rows"]:
+        lines.append(
+            f"{r['mult']:22s} {r['original']:12.2f} {100*r['swapper_reduction']:8.2f}% "
+            f"{100*r['theoretical_reduction']:8.2f}%  {r['best_cfg']:9s} "
+            f"{'C' if r['commutative'] else 'NC'}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_table(run()))

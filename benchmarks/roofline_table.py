@@ -1,0 +1,54 @@
+"""Format the dry-run roofline JSONL files (launch/dryrun.py --out) into the
+EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import json
+import os
+
+FILES = ["dryrun_16x16.jsonl", "dryrun_2x16x16.jsonl"]
+
+
+def load(paths=None):
+    rows = []
+    for p in paths or FILES:
+        full = p if os.path.exists(p) else os.path.join(os.path.dirname(__file__), "..", p)
+        if not os.path.exists(full):
+            continue
+        with open(full) as f:
+            for line in f:
+                if line.strip():
+                    rows.append(json.loads(line))
+    return rows
+
+
+def format_table(rows) -> str:
+    lines = [
+        f"{'arch':20s} {'shape':12s} {'mesh':8s} {'tC(s)':>9s} {'tM(s)':>9s} "
+        f"{'tX(s)':>9s} {'dominant':10s} {'useful':>7s} {'roofl%':>7s} {'mem/dev':>8s}"
+    ]
+    for r in rows:
+        if r.get("status") == "skip":
+            lines.append(f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:8s} "
+                         f"-- skipped: {r['reason'][:60]}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:20s} {r['shape']:12s} {r.get('mesh','?'):8s} "
+                         f"-- ERROR: {r.get('error','?')[:60]}")
+            continue
+        mem = r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        lines.append(
+            f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['t_compute']:9.4f} {r['t_memory']:9.4f} {r['t_collective']:9.4f} "
+            f"{r['dominant']:10s} {r['useful_ratio']:7.2f} "
+            f"{100*r['roofline_fraction']:6.2f}% {mem:7.1f}G"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    rows = load()
+    return {"rows": rows, "n": len(rows)}
+
+
+if __name__ == "__main__":
+    print(format_table(load()))

@@ -1,0 +1,68 @@
+"""Benchmark driver — one function per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--full]
+
+Prints each table and a ``name,us_per_call,derived`` CSV summary line per
+benchmark (derived = the table's headline number).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import app_table, component_table, hw_table, roofline_table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small fast subset")
+    ap.add_argument("--full", action="store_true", help="all multipliers + ALL parts")
+    args = ap.parse_args()
+
+    csv = ["name,us_per_call,derived"]
+
+    t0 = time.time()
+    comp = component_table.run(quick=args.quick)
+    print(component_table.format_table(comp))
+    n_calls = len(comp["rows"])
+    best = max(r["swapper_reduction"] for r in comp["rows"])
+    csv.append(f"component_table,{1e6*(time.time()-t0)/max(n_calls,1):.0f},"
+               f"best_mae_reduction={100*best:.1f}%")
+
+    t0 = time.time()
+    app = app_table.run(quick=args.quick, full=args.full)
+    print("\n" + app_table.format_table(app))
+    gains = []
+    for r in app["rows"]:
+        base, swapped = r["noswap"], r["swapper_app"]
+        if r["minimize"] and base > 0:
+            gains.append((base - swapped) / base)
+        elif not r["minimize"] and base > 0:
+            gains.append((swapped - base) / base)
+    best_gain = max(gains) if gains else 0.0
+    csv.append(f"app_table,{1e6*(time.time()-t0)/max(len(app['rows']),1):.0f},"
+               f"best_app_gain={100*best_gain:.1f}%")
+
+    t0 = time.time()
+    hw = hw_table.run()
+    print("\n" + hw_table.format_table(hw))
+    csv.append(f"hw_table,{1e6*(time.time()-t0):.0f},"
+               f"mxu_swap_overhead={100*hw['mxu_swap_overhead']:.1f}%")
+
+    rl = roofline_table.run()
+    if rl["n"]:
+        print("\nRoofline (from dry-run artifacts):")
+        print(roofline_table.format_table(rl["rows"]))
+        ok = [r for r in rl["rows"] if r.get("status") == "ok"]
+        if ok:
+            bestr = max(r["roofline_fraction"] for r in ok)
+            csv.append(f"roofline_table,0,best_roofline_fraction={100*bestr:.1f}%")
+    else:
+        print("\n(roofline: no dryrun_*.jsonl found — run repro.launch.dryrun --all)")
+
+    print("\n" + "\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""End-to-end AxBench application demo: sobel under approximate multipliers,
+reproducing the paper's NoSwap -> SWAPPER(App) -> oracle progression.
+
+    PYTHONPATH=src python examples/axbench_sobel.py
+"""
+import numpy as np
+
+import repro.apps as A
+import repro.core as C
+
+app = A.ALL_APPS["sobel"]
+mult = C.get("mul16s_mitch10_13")
+
+v_fxp, _ = A.evaluate(app, "fxp", n=96, seed=1234)
+v_nosw, out_ns = A.evaluate(app, None, mult=mult, n=96, seed=1234)
+cfg, train_val, table = A.tune_app(app, mult, n=96, seed=42)
+v_app, out_sw = A.evaluate(app, cfg, mult=mult, n=96, seed=1234)
+v_orc, _ = A.evaluate(app, "oracle", mult=mult, n=96, seed=1234)
+
+print(f"sobel SSIM (higher better), multiplier={mult.name}")
+print(f"  precise FxP       : {v_fxp:.4f}")
+print(f"  NoSwap            : {v_nosw:.4f}")
+print(f"  SWAPPER app-tuned : {v_app:.4f}   (chose {cfg.short() if cfg else 'NoSwap'})")
+print(f"  oracle            : {v_orc:.4f}")
+np.savez("sobel_outputs.npz", noswap=np.asarray(out_ns), swapper=np.asarray(out_sw))
+print("outputs saved to sobel_outputs.npz")

@@ -1,0 +1,37 @@
+"""Fig. 1 analog: error-surface heat maps (text rendering + .npz dump) for a
+non-commutative multiplier, without swap / with SWAPPER / oracle.
+
+    PYTHONPATH=src python examples/error_profile.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as C
+
+mult = C.get("mul8u_drum2_6")
+res = C.component_sweep(mult, tile=256)
+best = res.best("mae")
+
+vals = jnp.asarray(np.arange(256, dtype=np.int32))
+A, B = jnp.meshgrid(vals, vals, indexing="ij")
+exact = mult.exact_product(A, B)
+
+surfaces = {
+    "noswap": mult.fn(A, B),
+    "swapper": C.apply_swapper(mult, A, B, best),
+    "oracle": C.oracle_mult(mult).fn(A, B),
+}
+np.savez("error_profile.npz", **{
+    k: np.asarray(C.abs_err(v, exact, mult.signed)) for k, v in surfaces.items()
+})
+print(f"{mult.name}, best bit {best.short()} — coarse error maps (16x16 blocks,"
+      " '.' low error .. '#' high):")
+for name, surf in surfaces.items():
+    e = np.asarray(C.abs_err(surf, exact, mult.signed)).astype(float).reshape(16, 16, 16, 16)
+    blk = e.mean((1, 3))
+    mx = blk.max() or 1.0
+    chars = " .:-=+*#%@"
+    print(f"\n[{name}] MAE={e.mean():.1f}")
+    for row in blk:
+        print("".join(chars[min(int(v / mx * 9.999), 9)] for v in row))
+print("\nfull surfaces saved to error_profile.npz")

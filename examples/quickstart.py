@@ -1,0 +1,35 @@
+"""Quickstart: the whole SWAPPER pipeline on one non-commutative multiplier.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as C
+
+# 1. pick a non-commutative approximate multiplier from the library
+mult = C.get("mul8u_trunc0_4")
+print(f"{mult.name}: commutative={C.is_commutative(mult)}")
+
+# 2. error depends on operand order
+a, b = jnp.int32(200), jnp.int32(13)
+print(f"m({int(a)},{int(b)})={int(mult.fn(a, b))}  "
+      f"m({int(b)},{int(a)})={int(mult.fn(b, a))}  exact={int(a)*int(b)}")
+
+# 3. component-level tuning: explore all 4M single-bit decisions exhaustively
+res = C.component_sweep(mult, tile=256)
+best = res.best("mae")
+print(f"NoSwap MAE={res.noswap.mae:.2f}")
+print(f"SWAPPER best bit {best.short()}: MAE={res.per_config[best].mae:.2f} "
+      f"(-{100*res.reduction('mae'):.1f}%)")
+print(f"Oracle bound: MAE={res.oracle.mae:.2f} "
+      f"(-{100*res.theoretical_reduction('mae'):.1f}%)")
+
+# 4. deploy: a swapped multiplier is just another AxMult
+swapped = C.swapped_mult(mult, best)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.integers(0, 256, 10000).astype(np.int32))
+y = jnp.asarray(rng.integers(0, 256, 10000).astype(np.int32))
+e_base = np.abs(np.asarray(mult.fn(x, y)).astype(float) - np.asarray(x * y).astype(float)).mean()
+e_swap = np.abs(np.asarray(swapped.fn(x, y)).astype(float) - np.asarray(x * y).astype(float)).mean()
+print(f"random-input MAE: NoSwap={e_base:.2f} SWAPPER={e_swap:.2f}")

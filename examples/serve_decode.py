@@ -1,0 +1,22 @@
+"""Serve a small model with batched requests: prefill + decode with KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as CFG
+import repro.models as M
+from repro.serve import ServeConfig, generate
+
+cfg = CFG.reduced(CFG.ARCHS["gemma3-27b"])   # local:global attention family
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab, (4, 48)), jnp.int32)
+
+out = generate(params, {"tokens": prompts}, cfg,
+               ServeConfig(max_new_tokens=24, temperature=0.0))
+print(f"arch family: {cfg.family}, pattern: {cfg.pattern}")
+print("generated token ids:")
+print(np.asarray(out))

@@ -1,0 +1,48 @@
+"""Train a ~100M-class LM for a few hundred steps with SWAPPER approximate
+matmuls (MXU-factorized backend) as a first-class feature, with checkpointing
+and fault-tolerant supervision.
+
+    PYTHONPATH=src python examples/train_lm_ax.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as CFG
+import repro.models as M
+import repro.train as T
+from repro.configs.base import AxPolicy
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--d-model", type=int, default=512)
+ap.add_argument("--layers", type=int, default=8)
+args = ap.parse_args()
+
+base = CFG.reduced(CFG.ARCHS["qwen2-72b"])
+cfg = dataclasses.replace(
+    base, name="qwen2-100m-ax", d_model=args.d_model, n_layers=args.layers,
+    d_ff=args.d_model * 4, n_heads=8, n_kv_heads=4, head_dim=args.d_model // 8,
+    vocab=8192,
+    ax=AxPolicy(mult_name="mul8s_trunc0_4", backend="mxu", targets=("mlp",)),
+)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+print(f"params: {sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M, "
+      f"ax={cfg.ax.mult_name} swap={cfg.ax.swap.short()}")
+
+opt = T.AdamWConfig(lr=1e-3, warmup=20)
+par = CFG.ParallelConfig(remat="none", fsdp=False, seq_shard=False)
+step = jax.jit(T.make_train_step(cfg, par, opt), donate_argnums=(0,))
+stream = T.SyntheticStream(T.DataConfig(cfg.vocab, 128, 16, seed=0, mode="arith"))
+
+state, log = T.run_supervised(
+    lambda: T.init_train_state(params, opt),
+    lambda s, b: step(s, jax.tree.map(jnp.asarray, b)),
+    stream, args.steps,
+    T.FaultConfig(ckpt_dir="/tmp/repro_ax_train", ckpt_every=100),
+    on_step=lambda i, m: (i + 1) % 25 == 0 and print(
+        f"step {i+1}: loss={float(m['loss']):.4f}"),
+)
+print("done:", log)

@@ -1,0 +1,155 @@
+"""Common harness for the AxBench-in-JAX applications.
+
+Each application provides:
+  gen_inputs(n, seed)          — deterministic synthetic inputs (train/test
+                                 split = different seeds, paper protocol)
+  reference(inputs)            — float32/float64 'Original' pipeline (numpy)
+  run_fxp(inputs, mul)         — Q16.16 pipeline, every multiply via ``mul``
+                                 (jpeg overrides with a direct int16 pipeline)
+  metric(out, ref)             — ARE / miss-rate / SSIM, jit-friendly
+
+The harness evaluates any app under:
+  'fp'      — the float original               (paper Table II 'Original')
+  'fxp'     — precise fixed point              (paper Table II 'FxP')
+  NoSwap    — approximate, no swapping         (paper Table III 'NoSwap')
+  SwapConfig— approximate + SWAPPER            ('Comp.' / 'App.' columns)
+  'oracle'  — per-multiply oracle order        ('Theor.' column)
+and drives the application-level tuning with a *dynamic* swap configuration
+(one compile for the whole 4M sweep).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import FxpMath, from_fxp, make_mul, to_fxp
+from repro.core.modular import AxMul32Config, PART_MD_LO
+from repro.core.multipliers import AxMult
+from repro.core.swapper import (
+    SwapConfig,
+    apply_swapper,
+    apply_swapper_dyn,
+    oracle_mult,
+)
+from repro.core.tuning import tune_application
+
+__all__ = ["AxApp", "evaluate", "tune_app", "smooth_image", "Mode"]
+
+Mode = Union[str, None, SwapConfig]  # 'fp' | 'fxp' | None(=NoSwap) | cfg | 'oracle'
+
+
+@dataclasses.dataclass
+class AxApp:
+    name: str
+    metric_name: str            # 'are' | 'miss_rate' | 'ssim'
+    minimize: bool
+    kind: str                   # 'fxp32' (Eq.6 modular) | 'int16' (direct mul16s)
+    gen_inputs: Callable        # (n, seed) -> pytree of np arrays
+    reference: Callable         # inputs -> np.ndarray (float pipeline)
+    run_fxp: Callable           # (inputs, mul_or_mult16) -> jnp output
+    metric: Callable            # (out, ref) -> scalar
+
+
+def _mul16_closure(mult: AxMult, swap, dyn):
+    """Direct 16-bit multiply injection for 'int16' apps (jpeg)."""
+    if mult is None:
+        return lambda a, b: a.astype(jnp.int32) * b.astype(jnp.int32)
+    if dyn is not None:
+        return lambda a, b: apply_swapper_dyn(mult, a, b, *dyn).astype(jnp.int32)
+    return lambda a, b: apply_swapper(mult, a, b, swap).astype(jnp.int32)
+
+
+def _build_mul(app: AxApp, mult: Optional[AxMult], parts, swap, dyn):
+    if app.kind == "int16":
+        return _mul16_closure(mult, swap, dyn)
+    if mult is None:
+        return make_mul(None)
+    cfg = AxMul32Config(mult, parts=parts, swap=swap)
+    return make_mul(cfg, dyn)
+
+
+def evaluate(
+    app: AxApp,
+    mode: Mode = "fxp",
+    mult: Optional[AxMult] = None,
+    parts: tuple = PART_MD_LO,
+    n: int = 256,
+    seed: int = 1234,      # test split (train split uses a different seed)
+    inputs=None,
+):
+    """Run one configuration end to end; returns (metric_value, output)."""
+    if inputs is None:
+        inputs = app.gen_inputs(n, seed)
+    ref = app.reference(inputs)
+    if mode == "fp":
+        return app.metric(jnp.asarray(ref), jnp.asarray(ref)), ref
+    if mode == "fxp":
+        mul = _build_mul(app, None, parts, None, None)
+    elif mode == "oracle":
+        assert mult is not None
+        mul = _build_mul(app, oracle_mult(mult), parts, None, None)
+    else:  # None (NoSwap) or a SwapConfig
+        assert mult is not None
+        mul = _build_mul(app, mult, parts, mode, None)
+    out = app.run_fxp(inputs, mul)
+    return float(jax.device_get(app.metric(out, jnp.asarray(ref)))), out
+
+
+def tune_app(
+    app: AxApp,
+    mult: AxMult,
+    parts: tuple = PART_MD_LO,
+    n: int = 256,
+    seed: int = 42,        # train split
+    inputs=None,
+):
+    """Application-level SWAPPER tuning (paper §III.B): score all 4M configs
+    on representative (train) inputs with the app's own metric."""
+    if inputs is None:
+        inputs = app.gen_inputs(n, seed)
+    ref = jnp.asarray(app.reference(inputs))
+    dev_inputs = jax.tree.map(jnp.asarray, inputs)
+
+    @jax.jit
+    def run_cfg(op_is_a, bit, value):
+        mul = _build_mul(app, mult, parts, None, (op_is_a, bit, value))
+        out = app.run_fxp(dev_inputs, mul)
+        return app.metric(out, ref)
+
+    best, best_val, table = tune_application(
+        run_cfg, bits=mult.bits, minimize=app.minimize
+    )
+    return best, best_val, table
+
+
+# ---------------------------------------------------------------------------
+# shared synthetic-input helpers
+# ---------------------------------------------------------------------------
+
+def smooth_image(h, w, seed, channels: Optional[int] = None) -> np.ndarray:
+    """Structured synthetic image in [0, 255]: random smooth cosine field +
+    rectangles + gradient (SSIM needs structure, not noise)."""
+    rng = np.random.default_rng(seed)
+    y, x = np.mgrid[0:h, 0:w].astype(np.float64)
+    c = channels or 1
+    img = np.zeros((h, w, c))
+    for ch in range(c):
+        f = np.zeros((h, w))
+        for _ in range(6):
+            fx, fy = rng.uniform(0.2, 4.0, 2)
+            ph1, ph2 = rng.uniform(0, 2 * np.pi, 2)
+            f += rng.uniform(0.3, 1.0) * np.cos(2 * np.pi * fx * x / w + ph1) * np.cos(
+                2 * np.pi * fy * y / h + ph2
+            )
+        f += (x / w) * rng.uniform(0.5, 2.0)
+        for _ in range(4):  # hard edges
+            x0, y0 = rng.integers(0, w - 8), rng.integers(0, h - 8)
+            dw, dh = rng.integers(4, max(5, w // 3)), rng.integers(4, max(5, h // 3))
+            f[y0 : y0 + dh, x0 : x0 + dw] += rng.uniform(-1.5, 1.5)
+        f = (f - f.min()) / max(f.max() - f.min(), 1e-9)
+        img[..., ch] = f * 255.0
+    return img if channels else img[..., 0]

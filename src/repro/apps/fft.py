@@ -1,0 +1,92 @@
+"""AxBench `fft`: radix-2 DIT FFT, Q16.16 butterflies, ARE metric."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import FxpMath, from_fxp, to_fxp
+
+from .common import AxApp
+
+N_DEFAULT = 1024
+
+
+def gen_inputs(n, seed):
+    n = int(n) if int(n) >= 64 else N_DEFAULT
+    n = 1 << int(np.log2(n))
+    rng = np.random.default_rng(seed)
+    # bounded, structured signal (sum of tones + noise), |x| < 1
+    t = np.arange(n)
+    sig = np.zeros(n)
+    for _ in range(4):
+        sig += rng.uniform(0.05, 0.2) * np.sin(2 * np.pi * rng.uniform(1, n / 4) * t / n)
+    sig += rng.normal(0, 0.02, n)
+    return {"re": sig.astype(np.float64), "im": np.zeros(n)}
+
+
+def _bitrev_perm(n):
+    bits = int(np.log2(n))
+    idx = np.arange(n)
+    rev = np.zeros(n, np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def run_fxp(inputs, mul):
+    F = FxpMath(mul)
+    re_in = jnp.asarray(inputs["re"], jnp.float32)
+    n = re_in.shape[0]
+    rev = _bitrev_perm(n)
+    re = to_fxp(re_in)[rev]
+    im = to_fxp(jnp.asarray(inputs["im"], jnp.float32))[rev]
+
+    stages = int(np.log2(n))
+    for s in range(1, stages + 1):
+        m = 1 << s
+        half = m >> 1
+        # twiddles for this stage, replicated across groups (precise constants)
+        k = np.arange(n // 2) % half
+        ang = -2.0 * np.pi * k / m
+        wr = to_fxp(jnp.asarray(np.cos(ang), jnp.float32))
+        wi = to_fxp(jnp.asarray(np.sin(ang), jnp.float32))
+        # butterfly index sets
+        idx = np.arange(n // 2)
+        grp = idx // half
+        pos = idx % half
+        top = (grp * m + pos).astype(np.int64)
+        bot = top + half
+        ur, ui = re[top], im[top]
+        vr, vi = re[bot], im[bot]
+        # t = w * v (4 fxp multiplies)
+        tr = F.mul(wr, vr) - F.mul(wi, vi)
+        ti = F.mul(wr, vi) + F.mul(wi, vr)
+        re = re.at[top].set(ur + tr).at[bot].set(ur - tr)
+        im = im.at[top].set(ui + ti).at[bot].set(ui - ti)
+    return jnp.stack([from_fxp(re), from_fxp(im)])
+
+
+def reference(inputs):
+    x = np.asarray(inputs["re"]) + 1j * np.asarray(inputs["im"])
+    X = np.fft.fft(x)
+    return np.stack([X.real, X.imag]).astype(np.float32)
+
+
+def metric(out, ref):
+    """ARE with the AxBench qos convention: zero-reference entries still
+    count (denominator clamped to 1e-6 of the scale)."""
+    err = jnp.abs(out - ref)
+    den = jnp.maximum(jnp.abs(ref), 1e-3)
+    return jnp.mean(err / den)
+
+
+APP = AxApp(
+    name="fft",
+    metric_name="are",
+    minimize=True,
+    kind="fxp32",
+    gen_inputs=gen_inputs,
+    reference=reference,
+    run_fxp=run_fxp,
+    metric=metric,
+)

@@ -1,0 +1,98 @@
+"""AxBench `jmeint`: 3-D triangle-triangle intersection (separating-axis
+test), Q16.16 dot/cross products, miss-rate metric."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import FxpMath, from_fxp, to_fxp
+
+from .common import AxApp
+
+
+def gen_inputs(n, seed):
+    rng = np.random.default_rng(seed)
+    n = max(64, int(n))
+    # pairs with nearby centers => a healthy mix of hits and misses
+    c1 = rng.uniform(-0.5, 0.5, (n, 1, 3))
+    c2 = c1 + rng.normal(0, 0.18, (n, 1, 3))
+    t1 = c1 + rng.uniform(-0.55, 0.55, (n, 3, 3))
+    t2 = c2 + rng.uniform(-0.55, 0.55, (n, 3, 3))
+    return {"t1": t1, "t2": t2}
+
+
+def _sat_intersect(tri1, tri2, dot, cross, zero):
+    """Branchless separating-axis test.  tri (N,3,3).  Returns bool (N,)."""
+    e1 = jnp.stack([tri1[:, 1] - tri1[:, 0], tri1[:, 2] - tri1[:, 1],
+                    tri1[:, 0] - tri1[:, 2]], axis=1)           # (N,3,3)
+    e2 = jnp.stack([tri2[:, 1] - tri2[:, 0], tri2[:, 2] - tri2[:, 1],
+                    tri2[:, 0] - tri2[:, 2]], axis=1)
+    n1 = cross(e1[:, 0], e1[:, 1])[:, None, :]                  # (N,1,3)
+    n2 = cross(e2[:, 0], e2[:, 1])[:, None, :]
+    # 9 edge-pair axes
+    ee = cross(
+        jnp.repeat(e1, 3, axis=1).reshape(-1, 3),
+        jnp.tile(e2, (1, 3, 1)).reshape(-1, 3),
+    ).reshape(tri1.shape[0], 9, 3)
+    axes = jnp.concatenate([n1, n2, ee], axis=1)                # (N,11,3)
+
+    def project(tri):
+        # (N, 11, 3 verts)
+        return dot(axes[:, :, None, :], tri[:, None, :, :])
+
+    p1 = project(tri1)
+    p2 = project(tri2)
+    min1, max1 = p1.min(-1), p1.max(-1)
+    min2, max2 = p2.min(-1), p2.max(-1)
+    sep = (max1 < min2) | (max2 < min1)                         # (N,11)
+    degenerate = jnp.all(jnp.abs(axes) <= zero, axis=-1)        # ignore null axes
+    return ~jnp.any(sep & ~degenerate, axis=1)
+
+
+def run_fxp(inputs, mul):
+    F = FxpMath(mul)
+    t1 = to_fxp(jnp.asarray(inputs["t1"], jnp.float32))
+    t2 = to_fxp(jnp.asarray(inputs["t2"], jnp.float32))
+
+    def dot(a, b):
+        return F.mul(a, b).sum(axis=-1)
+
+    def cross(a, b):
+        ax, ay, az = a[..., 0], a[..., 1], a[..., 2]
+        bx, by, bz = b[..., 0], b[..., 1], b[..., 2]
+        return jnp.stack(
+            [F.mul(ay, bz) - F.mul(az, by),
+             F.mul(az, bx) - F.mul(ax, bz),
+             F.mul(ax, by) - F.mul(ay, bx)], axis=-1)
+
+    return _sat_intersect(t1, t2, dot, cross, zero=jnp.int32(2))
+
+
+def reference(inputs):
+    t1 = jnp.asarray(inputs["t1"], jnp.float32)
+    t2 = jnp.asarray(inputs["t2"], jnp.float32)
+
+    def dot(a, b):
+        return (a * b).sum(axis=-1)
+
+    def cross(a, b):
+        return jnp.cross(a, b)
+
+    out = _sat_intersect(t1, t2, dot, cross, zero=jnp.float32(1e-12))
+    return np.asarray(out)
+
+
+def metric(out, ref):
+    return jnp.mean((out != ref).astype(jnp.float32))  # miss rate
+
+
+APP = AxApp(
+    name="jmeint",
+    metric_name="miss_rate",
+    minimize=True,
+    kind="fxp32",
+    gen_inputs=gen_inputs,
+    reference=reference,
+    run_fxp=run_fxp,
+    metric=metric,
+)

@@ -1,0 +1,115 @@
+"""AxBench `jpeg`: 8x8 block DCT -> quantize -> dequantize -> IDCT.
+
+Unlike the other benchmarks, jpeg is implemented with **16-bit integer
+arithmetic directly** (paper §III.B: "Jpeg is implemented with 16-bit integer
+arithmetic") — every multiply is a single mul16s call, no Eq. 6 modular
+composition.  The DCT matrix is scaled by 2^7 (operands stay within the
+signed-16 input domain) and quantization uses reciprocal multiplies, as in
+integer libjpeg implementations.  Metric: SSIM of the reconstructed image.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import AxApp, smooth_image
+from .ssim import ssim
+
+_S = 7  # DCT matrix scale = 2^7
+
+
+def _dct_matrix():
+    M = np.zeros((8, 8))
+    for u in range(8):
+        cu = np.sqrt(0.125) if u == 0 else 0.5
+        for x in range(8):
+            M[u, x] = cu * np.cos((2 * x + 1) * u * np.pi / 16)
+    return M
+
+
+_M_INT = np.round(_dct_matrix() * (1 << _S)).astype(np.int32)       # |m| <= 64
+_Q50 = np.array(  # JPEG luminance quantization table (quality 50)
+    [[16, 11, 10, 16, 24, 40, 51, 61],
+     [12, 12, 14, 19, 26, 58, 60, 55],
+     [14, 13, 16, 24, 40, 57, 69, 56],
+     [14, 17, 22, 29, 51, 87, 80, 62],
+     [18, 22, 37, 56, 68, 109, 103, 77],
+     [24, 35, 55, 64, 81, 104, 113, 92],
+     [49, 64, 78, 87, 103, 121, 120, 101],
+     [72, 92, 95, 98, 112, 100, 103, 99]], np.int32)
+_RECIP_Q = np.round((1 << 15) / _Q50).astype(np.int32)              # <= 2048
+
+
+def gen_inputs(n, seed):
+    side = max(32, int(n))
+    side -= side % 8
+    return {"img": smooth_image(side, side, seed)}  # [0,255]
+
+
+def _blocks(img):
+    h, w = img.shape
+    return img.reshape(h // 8, 8, w // 8, 8).transpose(0, 2, 1, 3).reshape(-1, 8, 8)
+
+
+def _unblocks(blk, h, w):
+    return blk.reshape(h // 8, w // 8, 8, 8).transpose(0, 2, 1, 3).reshape(h, w)
+
+
+def _matmul16(mul16, A, B):
+    """(..., 8, 8) x (..., 8, 8) int matmul with every scalar product routed
+    through mul16 (int16-domain operands)."""
+    prod = mul16(A[..., :, :, None], B[..., None, :, :])  # (..., 8, 8k, 8)
+    return prod.sum(axis=-2)
+
+
+def run_fxp(inputs, mul16):
+    img = jnp.asarray(inputs["img"], jnp.float32)
+    h, w = img.shape
+    x = _blocks(jnp.round(img).astype(jnp.int32) - 128)              # (B,8,8)
+    M = jnp.asarray(_M_INT)
+    # forward DCT: Y = (M X M^T) >> 2S  — staged to keep operands 16-bit
+    t = _matmul16(mul16, M[None], x) >> _S                           # (B,8,8)
+    y = _matmul16(mul16, t, M.T[None]) >> _S
+    # quantize / dequantize (reciprocal multiply, then restore)
+    q = mul16(y, jnp.asarray(_RECIP_Q)[None]) >> 15
+    yq = mul16(q, jnp.asarray(_Q50)[None])
+    # inverse DCT: X' = (M^T Y M) >> 2S
+    t2 = _matmul16(mul16, M.T[None], yq) >> _S
+    x2 = _matmul16(mul16, t2, M[None]) >> _S
+    out = jnp.clip(x2 + 128, 0, 255).astype(jnp.float32)
+    return _unblocks(out, h, w)
+
+
+def reference(inputs):
+    """Same integer pipeline with precise multiplies (the 'original' 16-bit
+    integer implementation, as in AxBench's jpeg)."""
+    img = np.asarray(inputs["img"], np.float64)
+    h, w = img.shape
+    x = np.round(img).astype(np.int64) - 128
+    blk = x.reshape(h // 8, 8, w // 8, 8).transpose(0, 2, 1, 3).reshape(-1, 8, 8)
+    M = _M_INT.astype(np.int64)
+    t = (M[None] @ blk) >> _S
+    y = (t @ M.T[None]) >> _S
+    q = (y * _RECIP_Q[None]) >> 15
+    yq = q * _Q50[None]
+    t2 = (M.T[None] @ yq) >> _S
+    x2 = (t2 @ M[None]) >> _S
+    out = np.clip(x2 + 128, 0, 255).astype(np.float32)
+    out = out.reshape(h // 8, w // 8, 8, 8).transpose(0, 2, 1, 3).reshape(h, w)
+    return out
+
+
+def metric(out, ref):
+    return ssim(out, ref)
+
+
+APP = AxApp(
+    name="jpeg",
+    metric_name="ssim",
+    minimize=False,
+    kind="int16",
+    gen_inputs=gen_inputs,
+    reference=reference,
+    run_fxp=run_fxp,
+    metric=metric,
+)

@@ -1,0 +1,96 @@
+"""AxBench `kmeans`: RGB image segmentation (k=6, fixed Lloyd iterations),
+Q16.16 distance arithmetic, SSIM metric on the clustered image."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import FxpMath, from_fxp, to_fxp
+
+from .common import AxApp, smooth_image
+from .ssim import ssim
+
+K = 6
+ITERS = 4
+
+
+def gen_inputs(n, seed):
+    """Segmentation-friendly image: Voronoi regions of distinct base colors +
+    mild noise/shading (photo-like color statistics; a smooth gradient field
+    would put most pixels on cluster boundaries, which no fixed-point
+    implementation — ours or libfixmath's — can classify stably)."""
+    side = max(32, int(n))
+    rng = np.random.default_rng(seed)
+    colors = rng.uniform(0.1, 0.9, (8, 3))
+    sites = rng.uniform(0, side, (8, 2))
+    y, x = np.mgrid[0:side, 0:side]
+    d = (x[..., None] - sites[:, 0]) ** 2 + (y[..., None] - sites[:, 1]) ** 2
+    img = colors[d.argmin(-1)]
+    img += rng.normal(0, 0.015, img.shape)  # sensor-ish noise
+    img = np.clip(img, 0.0, 1.0)
+    # deterministic spread-out initial centroids (same for fxp and reference)
+    init = np.linspace(0.08, 0.92, K)[:, None] * np.ones((K, 3))
+    return {"img": img, "init": init}
+
+
+def _assign_fxp(F, px, cents):
+    """px (P,3) fxp; cents (K,3) fxp -> (P,) argmin distance^2."""
+    d = px[:, None, :] - cents[None, :, :]              # (P,K,3)
+    d2 = F.mul(d, d).sum(axis=-1)                       # fxp squares
+    return jnp.argmin(d2, axis=1)
+
+
+def run_fxp(inputs, mul):
+    F = FxpMath(mul)
+    img = jnp.asarray(inputs["img"], jnp.float32)
+    h, w, _ = img.shape
+    px = to_fxp(img.reshape(-1, 3))
+    cents = to_fxp(jnp.asarray(inputs["init"], jnp.float32))
+
+    def body(cents, _):
+        idx = _assign_fxp(F, px, cents)
+        onehot = (idx[:, None] == jnp.arange(K)[None, :]).astype(jnp.int32)
+        counts = onehot.sum(axis=0)                      # (K,)
+        sums = (px[:, None, :] * onehot[:, :, None]).sum(axis=0)  # fxp sums
+        new = F.div(sums, jnp.maximum(counts, 1)[:, None] << 16)  # fxp mean
+        new = jnp.where((counts > 0)[:, None], new, cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(body, cents, None, length=ITERS)
+    idx = _assign_fxp(F, px, cents)
+    out = jnp.take(cents, idx, axis=0).reshape(h, w, 3)
+    return from_fxp(out) * 255.0
+
+
+def reference(inputs):
+    img = np.asarray(inputs["img"], np.float64)
+    h, w, _ = img.shape
+    px = img.reshape(-1, 3)
+    cents = np.asarray(inputs["init"], np.float64)
+    for _ in range(ITERS):
+        d2 = ((px[:, None, :] - cents[None, :, :]) ** 2).sum(-1)
+        idx = d2.argmin(1)
+        for k in range(K):
+            sel = idx == k
+            if sel.any():
+                cents[k] = px[sel].mean(0)
+    d2 = ((px[:, None, :] - cents[None, :, :]) ** 2).sum(-1)
+    idx = d2.argmin(1)
+    return (cents[idx].reshape(h, w, 3) * 255.0).astype(np.float32)
+
+
+def metric(out, ref):
+    return ssim(out, ref)
+
+
+APP = AxApp(
+    name="kmeans",
+    metric_name="ssim",
+    minimize=False,
+    kind="fxp32",
+    gen_inputs=gen_inputs,
+    reference=reference,
+    run_fxp=run_fxp,
+    metric=metric,
+)

@@ -1,0 +1,45 @@
+"""Structural Similarity Index (SSIM) — the paper's image-quality metric
+(replacing AxBench's raw image diff, per §III.B).  Uniform 8x8 window variant
+on a 0..255 dynamic range; jit-friendly (used inside the app-level tuner)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ssim"]
+
+_C1 = (0.01 * 255.0) ** 2
+_C2 = (0.03 * 255.0) ** 2
+
+
+def _window_mean(x, w):
+    """Mean over w x w windows via a separable cumulative trick ('valid')."""
+    k = jnp.ones((w,), x.dtype) / w
+    # separable 1-D convolutions along the two trailing axes
+    x = jnp.apply_along_axis if False else x  # keep jit-friendly: use conv
+    import jax
+
+    def conv1d(v, axis):
+        moved = jnp.moveaxis(v, axis, -1)
+        flat = moved.reshape(-1, moved.shape[-1])
+        out = jax.vmap(lambda r: jnp.convolve(r, k, mode="valid"))(flat)
+        return jnp.moveaxis(out.reshape(moved.shape[:-1] + (out.shape[-1],)), -1, axis)
+
+    return conv1d(conv1d(x, -2), -1)
+
+
+def ssim(img_a, img_b, window: int = 8) -> jnp.ndarray:
+    """Mean SSIM between two images (H, W) or (H, W, C), float, 0..255."""
+    a = img_a.astype(jnp.float32)
+    b = img_b.astype(jnp.float32)
+    if a.ndim == 3:  # channel-wise mean
+        vals = [ssim(a[..., c], b[..., c], window) for c in range(a.shape[-1])]
+        return jnp.mean(jnp.stack(vals))
+    mu_a = _window_mean(a, window)
+    mu_b = _window_mean(b, window)
+    aa = _window_mean(a * a, window) - mu_a * mu_a
+    bb = _window_mean(b * b, window) - mu_b * mu_b
+    ab = _window_mean(a * b, window) - mu_a * mu_b
+    num = (2 * mu_a * mu_b + _C1) * (2 * ab + _C2)
+    den = (mu_a**2 + mu_b**2 + _C1) * (aa + bb + _C2)
+    return jnp.mean(num / den)

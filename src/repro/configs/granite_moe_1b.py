@@ -1,0 +1,22 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    head_dim=64,
+    rope_theta=1e4,
+    act="silu",
+    n_experts=32,
+    n_shared_experts=0,
+    top_k=8,
+    moe_d_ff=512,
+    tie_embeddings=True,
+)

@@ -1,0 +1,58 @@
+"""SWAPPER core — the paper's contribution as a composable JAX module.
+
+Layers:
+  multipliers  — bit-accurate approximate multiplier families (AxICs)
+  swapper      — single-bit dynamic operand swapping (the paper's mechanism)
+  metrics      — MAE / WCE / ARE / MSE / EP (paper Eqs. 1-5)
+  tuning       — component- and application-level exploration framework
+  modular      — Eq. 6: 32-bit multiply from 16-bit approximate parts
+  fixedpoint   — Q16.16 math library with injectable approximate multiply
+"""
+from .metrics import METRICS, ErrorStats, abs_err, are, ep, mae, mse, wce
+from .modular import (
+    PART_ALL,
+    PART_MD_LO,
+    PART_NONE,
+    AxMul32Config,
+    ax_fxp_mul,
+    ax_fxp_mul_dyn,
+)
+from .multipliers import (
+    REGISTRY,
+    AxMult,
+    broken_array,
+    drum,
+    exact,
+    get,
+    is_commutative,
+    lut_mult,
+    make_lut,
+    mitchell,
+    perforate,
+    trunc,
+)
+from .swapper import (
+    SwapConfig,
+    all_configs,
+    apply_swapper,
+    apply_swapper_dyn,
+    cfg_to_dyn,
+    oracle_mult,
+    swap_mask,
+    swap_mask_dyn,
+    swapped_mult,
+)
+from .tuning import (
+    ComponentResult,
+    TwoBitConfig,
+    apply_swapper_two_bit,
+    component_sweep,
+    operand_values,
+    swap_mask_two_bit,
+    tile_stats_jnp,
+    tune_application,
+    two_bit_sweep,
+)
+from .fixedpoint import FX_ONE, FxpMath, from_fxp, make_mul, to_fxp
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,204 @@
+"""Q16.16 fixed-point math library with an injectable (approximable) multiply.
+
+The AxBench CPU benchmarks are floating-point; the paper converts them to
+32-bit fixed point via libfixmath and routes **every multiplication** through
+the Eq. 6 modular approximate multiplier.  This module is our libfixmath
+analog: all derived operations (div, sqrt, exp, log, sin, cos, atan, acos)
+are built on top of a single Q16.16 ``mul`` callable, so installing an
+approximate multiply automatically approximates the whole math library —
+matching the paper's "all multiplications are approximate" protocol.
+
+Division and the transcendental seeds use float32 only for *initial guesses*
+(and integer range reduction); the refining arithmetic is fixed point through
+``mul``, keeping the error model faithful.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .modular import AxMul32Config, ax_fxp_mul, ax_fxp_mul_dyn
+
+__all__ = ["FX_ONE", "FxpMath", "to_fxp", "from_fxp", "make_mul"]
+
+FX_ONE = 1 << 16
+_LN2 = int(round(np.log(2) * FX_ONE))
+_PI = int(round(np.pi * FX_ONE))
+_HALF_PI = int(round(np.pi / 2 * FX_ONE))
+_QUARTER_PI = int(round(np.pi / 4 * FX_ONE))
+_I32 = jnp.int32
+
+
+def to_fxp(x) -> jnp.ndarray:
+    """float -> Q16.16 (round to nearest), saturating to int32 range."""
+    v = jnp.clip(jnp.round(jnp.asarray(x, jnp.float32) * FX_ONE), -(2.0**31), 2.0**31 - 1)
+    return v.astype(jnp.int32)
+
+
+def from_fxp(x) -> jnp.ndarray:
+    return x.astype(jnp.float32) / FX_ONE
+
+
+def make_mul(cfg: Optional[AxMul32Config] = None, dyn=None) -> Callable:
+    """A Q16.16 multiply closure: precise (cfg=None), statically-configured
+    approximate, or dynamic-swap-config approximate (dyn = traced triple)."""
+    if cfg is None:
+        return lambda a, b: ax_fxp_mul(a, b, None)
+    if dyn is None:
+        return lambda a, b: ax_fxp_mul(a, b, cfg)
+    return lambda a, b: ax_fxp_mul_dyn(a, b, cfg, *dyn)
+
+
+class FxpMath:
+    """Q16.16 math built exclusively on ``self.mul`` (plus exact add/shift)."""
+
+    def __init__(self, mul: Callable):
+        self.mul = mul
+
+    # -- helpers ------------------------------------------------------
+    def const(self, x: float):
+        return jnp.int32(int(round(x * FX_ONE)))
+
+    def _poly(self, x, coeffs):
+        """Horner evaluation; coeffs are floats, highest degree first."""
+        acc = jnp.full_like(x, self.const(coeffs[0]))
+        for c in coeffs[1:]:
+            acc = self.mul(acc, x) + self.const(c)
+        return acc
+
+    # -- division (normalized-reciprocal Newton; float32 seed) ----------
+    def div(self, a, b):
+        """q = a/b.  The divisor is normalized to m in [1,2) by exact shifts
+        so the Q16.16 reciprocal keeps full relative precision for any
+        divisor magnitude; the Newton refinements go through self.mul and are
+        therefore approximated along with everything else."""
+        import jax.lax as lax
+
+        neg = jnp.logical_xor(a < 0, b < 0)
+        aa = jnp.abs(a)
+        bb = jnp.maximum(jnp.abs(b), 1)
+        e = (31 - lax.clz(bb.astype(jnp.uint32))).astype(jnp.int32) - 16
+        m = jnp.where(e >= 0, bb >> jnp.maximum(e, 0), bb << jnp.maximum(-e, 0))
+        r = to_fxp(1.0 / jnp.maximum(from_fxp(m), 0.5))  # seed, m in [1,2)
+        two = jnp.int32(2 * FX_ONE)
+        for _ in range(2):                                # r <- r*(2 - m*r)
+            r = self.mul(r, two - self.mul(m, r))
+        q = self.mul(aa, r)
+        q = jnp.where(e >= 0, q >> jnp.maximum(e, 0), q << jnp.maximum(-e, 0))
+        q = jnp.where(neg, -q, q)
+        return jnp.where(b == 0, jnp.int32(0), q)
+
+    # -- sqrt via normalized rsqrt Newton ---------------------------------
+    def sqrt(self, x):
+        """x = m * 4^(e/2) with m in [1,4) (exact shifts); sqrt(m) via rsqrt
+        Newton in Q16.16 keeps full relative precision at any magnitude."""
+        import jax.lax as lax
+
+        xs = jnp.maximum(x, 1)
+        e = ((31 - lax.clz(xs.astype(jnp.uint32))).astype(jnp.int32) - 16) & ~1
+        m = jnp.where(e >= 0, xs >> jnp.maximum(e, 0), xs << jnp.maximum(-e, 0))
+        r = to_fxp(1.0 / jnp.sqrt(jnp.maximum(from_fxp(m), 0.25)))  # seed
+        half = self.const(0.5)
+        three = jnp.int32(3 * FX_ONE)
+        for _ in range(2):                           # r <- r*(3 - m r^2)/2
+            r = self.mul(r, self.mul(half, three - self.mul(m, self.mul(r, r))))
+        s = self.mul(m, r)                           # sqrt(m) in [1,2)
+        h = e >> 1
+        s = jnp.where(h >= 0, s << jnp.maximum(h, 0), s >> jnp.maximum(-h, 0))
+        return jnp.where(x <= 0, jnp.int32(0), s)
+
+    # -- exp: x = k ln2 + t, e^x = 2^k e^t --------------------------------
+    def exp(self, x):
+        k = jnp.round(from_fxp(x) / float(np.log(2))).astype(jnp.int32)
+        k = jnp.clip(k, -17, 13)  # Q16.16 representable range of 2^k * e^t
+        t = x - k * _LN2
+        # e^t on |t| <= ln2/2: 6-term Taylor (|err| < 3e-6)
+        e = self._poly(t, [1 / 720, 1 / 120, 1 / 24, 1 / 6, 1 / 2, 1.0, 1.0])
+        e_shift = jnp.where(k >= 0, e << jnp.maximum(k, 0), e >> jnp.maximum(-k, 0))
+        return e_shift
+
+    # -- log: x = 2^k m, ln x = k ln2 + 2 atanh((m-1)/(m+1)) ---------------
+    def log(self, x):
+        import jax.lax as lax
+
+        xs = jnp.maximum(x, 1)
+        msb = (31 - lax.clz(xs.astype(jnp.uint32))).astype(jnp.int32)
+        k = msb - 16
+        m = jnp.where(k >= 0, xs >> jnp.maximum(k, 0), xs << jnp.maximum(-k, 0))
+        t = self.div(m - FX_ONE, m + FX_ONE)
+        t2 = self.mul(t, t)
+        # 2*(t + t^3/3 + t^5/5 + t^7/7)
+        s = self._poly(t2, [2 / 7, 2 / 5, 2 / 3, 2.0])
+        ln_m = self.mul(t, s)
+        out = k * _LN2 + ln_m
+        return jnp.where(x <= 0, jnp.int32(-(1 << 31)), out)
+
+    # -- sin/cos with pi/2 folding ----------------------------------------
+    def _sin_core(self, r):
+        r2 = self.mul(r, r)
+        # r - r^3/6 + r^5/120 - r^7/5040 on |r| <= pi/4
+        s = self._poly(r2, [-1 / 5040, 1 / 120, -1 / 6, 1.0])
+        return self.mul(r, s)
+
+    def _cos_core(self, r):
+        r2 = self.mul(r, r)
+        # 1 - r^2/2 + r^4/24 - r^6/720
+        return self._poly(r2, [-1 / 720, 1 / 24, -1 / 2, 1.0])
+
+    def _fold(self, x):
+        k = jnp.round(from_fxp(x) / float(np.pi / 2)).astype(jnp.int32)
+        r = x - k * _HALF_PI
+        return k & 3, r
+
+    def sin(self, x):
+        q, r = self._fold(x)
+        s, c = self._sin_core(r), self._cos_core(r)
+        return jnp.where(
+            q == 0, s, jnp.where(q == 1, c, jnp.where(q == 2, -s, -c))
+        )
+
+    def cos(self, x):
+        q, r = self._fold(x)
+        s, c = self._sin_core(r), self._cos_core(r)
+        return jnp.where(
+            q == 0, c, jnp.where(q == 1, -s, jnp.where(q == 2, -c, s))
+        )
+
+    # -- atan / atan2 / acos -----------------------------------------------
+    def _atan_small(self, z):
+        """atan on |z| <= 0.5 via 7-term odd series."""
+        z2 = self.mul(z, z)
+        s = self._poly(z2, [-1 / 15, 1 / 13, -1 / 11, 1 / 9, -1 / 7, 1 / 5, -1 / 3, 1.0])
+        return self.mul(z, s)
+
+    def atan(self, z):
+        neg = z < 0
+        za = jnp.where(neg, -z, z)
+        inv = za > FX_ONE
+        zb = jnp.where(inv, self.div(jnp.int32(FX_ONE), jnp.maximum(za, 1)), za)
+        mid = zb > (FX_ONE // 2)
+        zc = jnp.where(mid, self.div(zb - FX_ONE, zb + FX_ONE), zb)
+        a = self._atan_small(zc)
+        a = jnp.where(mid, _QUARTER_PI + a, a)
+        a = jnp.where(inv, _HALF_PI - a, a)
+        return jnp.where(neg, -a, a)
+
+    def atan2(self, y, x):
+        base = self.atan(self.div(y, jnp.where(x == 0, 1, x)))
+        out = jnp.where(
+            x > 0,
+            base,
+            jnp.where(
+                x < 0,
+                jnp.where(y >= 0, base + _PI, base - _PI),
+                jnp.where(y > 0, _HALF_PI, jnp.where(y < 0, -_HALF_PI, 0)),
+            ),
+        )
+        return out.astype(jnp.int32)
+
+    def acos(self, x):
+        xc = jnp.clip(x, -FX_ONE, FX_ONE)
+        one_minus = FX_ONE - self.mul(xc, xc)
+        return self.atan2(self.sqrt(one_minus), xc)

@@ -1,0 +1,115 @@
+"""Error metrics from the paper (Eqs. 1-5): MAE, WCE, ARE, MSE, EP.
+
+Two forms are provided:
+
+* direct array metrics (``mae(approx, precise)`` ...) used by tests and the
+  application-level tuner;
+* an exact *streaming accumulator* (:class:`ErrorStats`) used by the
+  component-level tuner, which must aggregate over up to 2^32 input pairs
+  without precision loss.  Absolute errors of 16-bit multipliers reach
+  ~1.5 * 2^31, so sums are carried as split 16-bit limb partial sums (exact
+  in uint32 per tile, recombined on the host in int64/float64).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["abs_err", "mae", "wce", "are", "mse", "ep", "METRICS", "ErrorStats"]
+
+
+def abs_err(approx, precise, signed: bool):
+    """Exact |approx - precise| in uint32 lanes (handles the int32-overflowing
+    signed case: both values in (-2^31, 2^31) so |diff| < 2^32 fits uint32)."""
+    au = approx.astype(jnp.uint32)
+    pu = precise.astype(jnp.uint32)
+    if signed:
+        big = approx.astype(jnp.int32) >= precise.astype(jnp.int32)
+    else:
+        big = au >= pu
+    return jnp.where(big, au - pu, pu - au)
+
+
+def _err_f64(approx, precise, signed):
+    e = np.asarray(abs_err(approx, precise, signed))
+    return e.astype(np.float64)
+
+
+def mae(approx, precise, signed: bool) -> float:
+    return float(_err_f64(approx, precise, signed).mean())
+
+
+def wce(approx, precise, signed: bool) -> float:
+    return float(_err_f64(approx, precise, signed).max())
+
+
+def are(approx, precise, signed: bool) -> float:
+    """Average relative error; zero-denominator inputs use denominator 1
+    (the AxBench qos convention of still counting an error when the
+    reference is 0)."""
+    e = _err_f64(approx, precise, signed)
+    p = np.abs(np.asarray(precise).astype(np.float64))
+    return float((e / np.maximum(p, 1.0)).mean())
+
+
+def mse(approx, precise, signed: bool) -> float:
+    e = _err_f64(approx, precise, signed)
+    return float((e * e).mean())
+
+
+def ep(approx, precise, signed: bool) -> float:
+    e = _err_f64(approx, precise, signed)
+    return float((e != 0).mean())
+
+
+METRICS = {"mae": mae, "wce": wce, "are": are, "mse": mse, "ep": ep}
+
+
+@dataclasses.dataclass
+class ErrorStats:
+    """Exact streaming accumulator for one error population.
+
+    Partial sums arrive from tile kernels as uint32 limb sums (see
+    ``core/tuning.py``) and are recombined here in int64/float64.
+    """
+
+    n: int = 0
+    sum_abs: int = 0            # exact, int64 semantics (python int)
+    max_abs: int = 0
+    count_neq: int = 0
+    sum_sq: float = 0.0         # float64 (MSE tolerated at ~1e-6 relative)
+    sum_rel: float = 0.0        # float64
+
+    def add_limbs(self, n, lo_sum, hi_sum, max_abs, count_neq, sum_sq, sum_rel):
+        self.n += int(n)
+        self.sum_abs += int(lo_sum) + (int(hi_sum) << 16)
+        self.max_abs = max(self.max_abs, int(max_abs))
+        self.count_neq += int(count_neq)
+        self.sum_sq += float(sum_sq)
+        self.sum_rel += float(sum_rel)
+
+    # -- metric views -------------------------------------------------
+    @property
+    def mae(self) -> float:
+        return self.sum_abs / max(self.n, 1)
+
+    @property
+    def wce(self) -> float:
+        return float(self.max_abs)
+
+    @property
+    def mse(self) -> float:
+        return self.sum_sq / max(self.n, 1)
+
+    @property
+    def ep(self) -> float:
+        return self.count_neq / max(self.n, 1)
+
+    @property
+    def are(self) -> float:
+        return self.sum_rel / max(self.n, 1)
+
+    def metric(self, name: str) -> float:
+        return getattr(self, name)

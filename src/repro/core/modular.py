@@ -1,0 +1,137 @@
+"""Eq. 6 of the paper: 32-bit multiplication composed from 16-bit multiplies.
+
+    A*B = (AH*2^16 + AL) * (BH*2^16 + BL)
+        = AH*BH*2^32  (HI)  +  (AH*BL + AL*BH)*2^16  (MD)  +  AL*BL  (LO)
+
+The paper plugs 16-bit *signed* EvoApprox multipliers (mul16s) into the three
+partial products; because AL/BL are unsigned 16-bit values, MD/LO operands are
+shifted right by one position to fit the signed range ("we shift the input
+values to one position right for MD and LO multiplications"), and the partial
+result is shifted back (the dropped LSB row is part of the approximation).
+The HI part can be kept precise (the paper's "MD and LO" configuration) or
+approximated too ("ALL").
+
+``lsb_fix=True`` is a **beyond-paper** accuracy option: it re-adds the exact
+LSB partial-product rows lost to the fit-to-signed shifts
+(AL*BL = 4ab + rb*(AL&~1) + ra*(BL&~1) + (ra&rb) for AL=2a+ra, BL=2b+rb),
+costing three selects + two adds per multiply.
+
+Everything is carried in int32/uint32 lanes with well-defined modular
+wraparound — no 64-bit types are needed (DESIGN.md §4): for a Q16.16
+fixed-point multiply the result is bits [16:48) of the 64-bit product,
+
+    (A*B) >> 16  ==  (HI << 16) + MD + (LO_u >> 16)        (mod 2^32)
+
+which is exact because LO is the only term that is not a multiple of 2^16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .multipliers import AxMult
+from .swapper import SwapConfig, apply_swapper, apply_swapper_dyn
+
+__all__ = [
+    "AxMul32Config",
+    "PART_ALL",
+    "PART_MD_LO",
+    "PART_NONE",
+    "ax_fxp_mul",
+    "ax_fxp_mul_dyn",
+]
+
+PART_ALL = ("HI", "MD", "LO")
+PART_MD_LO = ("MD", "LO")
+PART_NONE = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class AxMul32Config:
+    """Which 16-bit partial products are approximated, with which multiplier,
+    and which SWAPPER configuration (None = NoSwap)."""
+
+    mult: AxMult                       # 16-bit signed multiplier
+    parts: tuple = PART_MD_LO          # subset of {"HI","MD","LO"}
+    swap: Optional[SwapConfig] = None
+    lsb_fix: bool = False              # beyond-paper LSB-row restoration
+
+    def __post_init__(self):
+        assert self.mult.bits == 16 and self.mult.signed, "paper uses mul16s"
+
+
+def _u32(x):
+    return x.astype(jnp.uint32)
+
+
+def _split(x):
+    """int32 -> (high signed 16, low unsigned 16)."""
+    xh = (x >> 16).astype(jnp.int32)
+    xl = (x & 0xFFFF).astype(jnp.int32)
+    return xh, xl
+
+
+def _ax(cfg: AxMul32Config, a, b, dyn):
+    if dyn is not None:
+        return apply_swapper_dyn(cfg.mult, a, b, *dyn).astype(jnp.int32)
+    return apply_swapper(cfg.mult, a, b, cfg.swap).astype(jnp.int32)
+
+
+def _mul32_body(A, B, cfg: Optional[AxMul32Config], dyn):
+    A = A.astype(jnp.int32)
+    B = B.astype(jnp.int32)
+    AH, AL = _split(A)
+    BH, BL = _split(B)
+    parts = cfg.parts if cfg is not None else PART_NONE
+    fix = cfg.lsb_fix if cfg is not None else False
+
+    # ---- HI: signed x signed — native mul16s domain -------------------
+    if "HI" in parts:
+        hi = _u32(_ax(cfg, AH, BH, dyn))
+    else:
+        hi = _u32(AH * BH)  # |AH*BH| <= 2^30, fits int32
+
+    # ---- MD: signed x unsigned -----------------------------------------
+    if "MD" in parts:
+        md1 = _u32(_ax(cfg, AH, BL >> 1, dyn)) << 1
+        md2 = _u32(_ax(cfg, BH, AL >> 1, dyn)) << 1
+        if fix:  # AH*BL = 2*AH*(BL>>1) + AH*(BL&1)
+            md1 = md1 + _u32(jnp.where((BL & 1) != 0, AH, 0))
+            md2 = md2 + _u32(jnp.where((AL & 1) != 0, BH, 0))
+    else:
+        md1 = _u32(AH * BL)  # in (-2^31, 2^31), fits int32 exactly
+        md2 = _u32(BH * AL)
+
+    # ---- LO: unsigned x unsigned ----------------------------------------
+    if "LO" in parts:
+        lo = _u32(_ax(cfg, AL >> 1, BL >> 1, dyn)) << 2
+        if fix:  # AL*BL = 4ab + rb*(AL&~1) + ra*(BL&~1) + (ra & rb)
+            ra = AL & 1
+            rb = BL & 1
+            lo = (
+                lo
+                + _u32(jnp.where(rb != 0, AL & ~1, 0))
+                + _u32(jnp.where(ra != 0, BL & ~1, 0))
+                + _u32(ra & rb)
+            )
+    else:
+        lo = _u32(AL) * _u32(BL)  # < 2^32, exact in uint32
+
+    # ---- Q16.16 recombination: (product >> 16) mod 2^32 ------------------
+    res = (hi << 16) + md1 + md2 + (lo >> 16)
+    return res.astype(jnp.int32)
+
+
+def ax_fxp_mul(A, B, cfg: Optional[AxMul32Config] = None):
+    """Q16.16 fixed-point multiply via Eq. 6.  ``cfg=None`` (or empty parts)
+    -> bit-exact vs the int64 reference (see tests)."""
+    return _mul32_body(A, B, cfg, None)
+
+
+def ax_fxp_mul_dyn(A, B, cfg: AxMul32Config, op_is_a, bit, value):
+    """Dynamic-swap-config variant for the application-level tuner: the
+    SWAPPER (operand, bit, value) triple is traced, so one compiled
+    application scores the whole 4M-configuration sweep."""
+    return _mul32_body(A, B, cfg, (op_is_a, bit, value))

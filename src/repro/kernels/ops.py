@@ -1,0 +1,86 @@
+"""Jit'd public wrappers around the Pallas kernels."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multipliers import AxMult
+from repro.core.swapper import SwapConfig
+from repro.core.tuning import (
+    ComponentResult,
+    accs_from_row_stats,
+    operand_values,
+    result_from_accs,
+)
+
+from .ax_matmul import ax_matmul_pallas
+from .tuning_sweep import tuning_sweep_pallas
+
+__all__ = ["ax_matmul", "ax_matmul_dequant", "component_sweep_pallas"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mult", "swap", "block_m", "block_n", "block_k", "interpret")
+)
+def ax_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    mult: AxMult,
+    swap: Optional[SwapConfig] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """int8 x int8 -> int32 approximate matmul with fused SWAPPER."""
+    return ax_matmul_pallas(
+        a, b, mult, swap,
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mult", "swap", "block_m", "block_n", "block_k", "interpret")
+)
+def ax_matmul_dequant(
+    a: jax.Array,               # (M, K) int8
+    b: jax.Array,               # (K, N) int8
+    scale_a: jax.Array,         # (M, 1) f32 per-row
+    scale_b: jax.Array,         # (1, N) f32 per-col
+    mult: AxMult,
+    swap: Optional[SwapConfig] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Quantized approximate matmul with dequantization epilogue."""
+    acc = ax_matmul_pallas(
+        a, b, mult, swap,
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )
+    return (acc.astype(jnp.float32) * scale_a * scale_b).astype(out_dtype)
+
+
+def component_sweep_pallas(
+    mult: AxMult,
+    tile: int = 128,
+    sample_bits: Optional[int] = None,
+    seed: int = 0,
+    interpret: bool = True,
+) -> ComponentResult:
+    """Component-level tuning driven by the Pallas sweep kernel — a drop-in
+    replacement for ``repro.core.tuning.component_sweep`` (cross-checked in
+    tests/test_kernels.py)."""
+    vals = operand_values(mult.bits, mult.signed, sample_bits, seed)
+    stats = jax.device_get(
+        tuning_sweep_pallas(mult, jnp.asarray(vals), tile=tile, interpret=interpret)
+    )
+    r0, r1, orc = accs_from_row_stats(vals, stats)
+    return result_from_accs(mult, vals, r0, r1, orc)

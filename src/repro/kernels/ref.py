@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.multipliers import AxMult
+from repro.core.swapper import SwapConfig, apply_swapper
+from repro.core.tuning import tile_stats_jnp
+
+__all__ = ["ax_matmul_ref", "tuning_sweep_ref"]
+
+
+def ax_matmul_ref(a, b, mult: AxMult, swap: Optional[SwapConfig] = None):
+    """O(M*N*K) reference: materialize every scalar approximate product with
+    the SWAPPER decision applied, then reduce over K.  int32 (M, N)."""
+    A = a.astype(jnp.int32)[:, :, None]   # (M, K, 1)
+    B = b.astype(jnp.int32)[None, :, :]   # (1, K, N)
+    prod = apply_swapper(mult, A, B, swap).astype(jnp.int32)
+    return jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def tuning_sweep_ref(mult: AxMult, a_vals, b_vals):
+    """The component-tuning tile oracle (row stats of E0/E1/oracle)."""
+    return tile_stats_jnp(mult, a_vals, b_vals)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: component-level SWAPPER tuning sweep.
+
+Computes, over the full (a, b) operand grid, per-a row statistics of the two
+error surfaces E0(a,b) = |m(a,b) - ab| and E1(a,b) = |m(b,a) - ab| and of the
+pointwise oracle min(E0, E1):
+
+    lo/hi  — exact 16-bit limb sums of the absolute error (uint32)
+    mx     — row maximum (WCE)
+    cnt    — nonzero count (EP)
+    sq     — float32 sum of squared error (MSE)
+    rel    — float32 sum of relative error (ARE)
+
+Column statistics are *not* computed: E1 is the transpose of E0, so the
+per-b column stats equal the other surface's row stats (DESIGN.md §4 rank-1
+reduction).  Every one of the paper's 4M swap configurations and all five
+error metrics are then scored from these vectors by the host driver — the
+whole tuning phase is O(2^(2M)) work instead of the paper's O(4M * 2^(2M))
+circuit stimulations.
+
+Grid: (N/T, N/T) with the b-tile dimension innermost; the (T,) row-stat
+output blocks are indexed by the a-tile only and are revisited across the
+inner dimension with init-at-j==0 accumulation (the standard Pallas reduction
+pattern).  Validated in interpret mode against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.metrics import abs_err
+from repro.core.multipliers import AxMult
+
+__all__ = ["tuning_sweep_pallas", "STAT_NAMES", "SURF_NAMES"]
+
+STAT_NAMES = ("lo", "hi", "mx", "cnt", "sq", "rel")
+SURF_NAMES = ("r0", "r1", "orc")
+
+
+def _row_stats_tuple(e, exact_abs_f):
+    lo = jnp.sum(e & jnp.uint32(0xFFFF), axis=1, dtype=jnp.uint32)
+    hi = jnp.sum(e >> jnp.uint32(16), axis=1, dtype=jnp.uint32)
+    mx = jnp.max(e, axis=1)
+    cnt = jnp.sum((e != 0).astype(jnp.int32), axis=1, dtype=jnp.int32)
+    ef = e.astype(jnp.float32)
+    sq = jnp.sum(ef * ef, axis=1, dtype=jnp.float32)
+    rel = jnp.sum(ef / jnp.maximum(exact_abs_f, 1.0), axis=1, dtype=jnp.float32)
+    return lo, hi, mx, cnt, sq, rel
+
+
+def _sweep_kernel(a_ref, b_ref, *out_refs, mult: AxMult):
+    j = pl.program_id(1)
+
+    A = a_ref[...][:, None].astype(jnp.int32)
+    B = b_ref[...][None, :].astype(jnp.int32)
+    p0 = mult.fn(A, B)
+    p1 = mult.fn(B, A)
+    exact = mult.exact_product(A, B)
+    e0 = abs_err(p0, exact, mult.signed)
+    e1 = abs_err(p1, exact, mult.signed)
+    emin = jnp.minimum(e0, e1)
+    if mult.signed:
+        exact_abs = jnp.abs(exact.astype(jnp.float32))
+    else:
+        exact_abs = exact.astype(jnp.float32)
+
+    stats = (
+        _row_stats_tuple(e0, exact_abs)
+        + _row_stats_tuple(e1, exact_abs)
+        + _row_stats_tuple(emin, exact_abs)
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        for ref in out_refs:
+            ref[...] = jnp.zeros_like(ref)
+
+    for idx, (ref, val) in enumerate(zip(out_refs, stats)):
+        if STAT_NAMES[idx % 6] == "mx":
+            ref[...] = jnp.maximum(ref[...], val.astype(ref.dtype))
+        else:
+            ref[...] += val.astype(ref.dtype)
+
+
+def tuning_sweep_pallas(mult: AxMult, vals: jax.Array, tile: int = 128,
+                        interpret: bool = True):
+    """Full-grid sweep over ``vals x vals``.  Returns
+    ``{surf: {stat: (N,) array}}`` for surf in (r0, r1, orc)."""
+    n = vals.shape[0]
+    tile = min(tile, n)
+    assert n % tile == 0
+    grid = (n // tile, n // tile)
+
+    dtypes = dict(lo=jnp.uint32, hi=jnp.uint32, mx=jnp.uint32,
+                  cnt=jnp.int32, sq=jnp.float32, rel=jnp.float32)
+    out_shape = [
+        jax.ShapeDtypeStruct((n,), dtypes[s]) for _ in SURF_NAMES for s in STAT_NAMES
+    ]
+    out_specs = [
+        pl.BlockSpec((tile,), lambda i, j: (i,)) for _ in range(len(out_shape))
+    ]
+
+    kernel = functools.partial(_sweep_kernel, mult=mult)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+    )(vals, vals)
+
+    it = iter(outs)
+    return {surf: {s: next(it) for s in STAT_NAMES} for surf in SURF_NAMES}

@@ -1,0 +1,4 @@
+from .mesh import make_production_mesh
+from .sharding import set_mesh_ctx, shard
+
+__all__ = ["make_production_mesh", "set_mesh_ctx", "shard"]

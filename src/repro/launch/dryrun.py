@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract memory / cost / collective statistics
+for the roofline analysis (EXPERIMENTS.md §Dry-run, §Roofline).
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the dry-run needs 512 host placeholder devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, LONG_CONTEXT_OK, SHAPES, ParallelConfig
+from repro.configs.base import AxPolicy
+from repro.models import registry
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+from .mesh import (
+    batch_shardings,
+    cache_shardings,
+    make_production_mesh,
+    param_shardings,
+    state_shardings,
+)
+from .roofline import collective_bytes, roofline_report
+from .sharding import set_mesh_ctx
+
+
+def skip_reason(arch: str, shape_name: str):
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return "long_500k needs sub-quadratic attention (pure full-attention arch; DESIGN.md §6)"
+    return None
+
+
+def _n_periods(cfg):
+    if cfg.family == "encdec":
+        return cfg.n_layers
+    period = len(cfg.pattern) if cfg.pattern else 1
+    return (cfg.n_layers - cfg.first_dense) // period
+
+
+def _variant_cfg(cfg, k: int):
+    """Same model with k pattern-periods (lead/rest layers kept) — used for
+    the finite-difference cost extrapolation: XLA's HloCostAnalysis counts a
+    while-loop body once regardless of trip count, so the full scan-over-
+    layers compile underreports FLOPs/collectives by ~n_periods.  We compile
+    1- and 2-period UNROLLED variants and scale the per-period delta."""
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=k, n_enc_layers=k)
+    period = len(cfg.pattern) if cfg.pattern else 1
+    body = cfg.n_layers - cfg.first_dense
+    rest = body - (body // period) * period
+    return dataclasses.replace(cfg, n_layers=cfg.first_dense + k * period + rest)
+
+
+def build_cell(cfg, shape_name: str, mesh, par: ParallelConfig,
+               ax: AxPolicy = None):
+    """Returns (fn, args_specs, in_shardings) ready to lower."""
+    if ax is not None:
+        cfg = dataclasses.replace(cfg, ax=ax)
+    shape = SHAPES[shape_name]
+    specs = registry.input_specs(cfg, shape)
+
+    params_shape = jax.eval_shape(partial(registry.init_params, cfg=cfg),
+                                  jax.random.PRNGKey(0))
+    p_sh = param_shardings(mesh, par, params_shape)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        state_shape = {
+            "params": params_shape,
+            "opt": jax.eval_shape(partial(adamw_init, cfg=opt_cfg), params_shape),
+        }
+        s_sh = state_shardings(mesh, par, state_shape)
+        b_sh = batch_shardings(mesh, specs)
+        step = make_train_step(cfg, par, opt_cfg)
+
+        def fn(state, batch):
+            with set_mesh_ctx(mesh, par):
+                return step(state, batch)
+
+        return fn, (state_shape, specs), (s_sh, b_sh), cfg, shape
+
+    if shape.kind == "prefill":
+        max_len = shape.seq_len + 64
+
+        def fn(params, batch):
+            with set_mesh_ctx(mesh, par):
+                return registry.prefill(params, batch, cfg, par, max_cache_len=max_len)
+
+        b_sh = batch_shardings(mesh, specs)
+        return fn, (params_shape, specs), (p_sh, b_sh), cfg, shape
+
+    # decode
+    cache_shape = specs["cache"]
+    tok = specs["tokens"]
+    c_sh = cache_shardings(mesh, par, cache_shape, cfg)
+    t_sh = batch_shardings(mesh, {"tokens": tok})["tokens"]
+
+    def fn(params, cache, tokens):
+        with set_mesh_ctx(mesh, par):
+            return registry.decode_step(
+                params, cache, tokens, jnp.int32(shape.seq_len - 1), cfg, par
+            )
+
+    return fn, (params_shape, cache_shape, tok), (p_sh, c_sh, t_sh), cfg, shape
+
+
+def _compile_stats(cfg, shape_name, mesh, par, ax):
+    fn, arg_shapes, in_sh, cfg2, shape = build_cell(cfg, shape_name, mesh, par, ax)
+    jfn = jax.jit(fn, in_shardings=in_sh)
+    with mesh:
+        lowered = jfn.lower(*arg_shapes)
+        compiled = lowered.compile()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list if isinstance(cost_list, dict) else (cost_list[0] if cost_list else {})
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    return dict(
+        flops=float(cost.get("flops", 0.0)),
+        bytes=float(cost.get("bytes accessed", 0.0)),
+        coll=coll,
+        mem=mem,
+        cfg=cfg2,
+        shape=shape,
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, par: ParallelConfig,
+             ax: AxPolicy = None, verbose=True, extrapolate=True, mesh=None,
+             cfg_patch: dict = None):
+    from repro.models import layers as _layers
+
+    reason = skip_reason(arch, shape_name)
+    if mesh is not None:
+        mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    else:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    if reason:
+        row = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skip", "reason": reason}
+        if verbose:
+            print(json.dumps(row))
+            sys.stdout.flush()
+        return row
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cfg = ARCHS[arch]
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    t0 = time.time()
+
+    # 1) FULL compile: proves the cell lowers/compiles and gives memory.
+    full = _compile_stats(cfg, shape_name, mesh, par, ax)
+    t1 = time.time()
+
+    # 2) Cost extrapolation (XLA counts while bodies once): compile 1- and
+    #    2-period variants with layer scan + attention chunk loops unrolled,
+    #    scale the per-period delta by the period count.
+    P = _n_periods(cfg)
+    if extrapolate and P > 1:
+        par_u = dataclasses.replace(par, scan_layers=False)
+        _layers.COST_MODE = True
+        try:
+            v1 = _compile_stats(_variant_cfg(cfg, 1), shape_name, mesh, par_u, ax)
+            v2 = _compile_stats(_variant_cfg(cfg, 2), shape_name, mesh, par_u, ax)
+        finally:
+            _layers.COST_MODE = False
+        flops = v1["flops"] + (P - 1) * (v2["flops"] - v1["flops"])
+        byts = v1["bytes"] + (P - 1) * (v2["bytes"] - v1["bytes"])
+        coll_total = (v1["coll"]["_total"]
+                      + (P - 1) * (v2["coll"]["_total"] - v1["coll"]["_total"]))
+        coll_detail = {
+            k: int(v1["coll"][k] + (P - 1) * (v2["coll"][k] - v1["coll"][k]))
+            for k in v1["coll"] if k != "_total"
+        }
+        cost_src = "extrapolated_1p2p"
+    else:
+        flops, byts = full["flops"], full["bytes"]
+        coll_total = full["coll"]["_total"]
+        coll_detail = {k: v for k, v in full["coll"].items() if k != "_total"}
+        cost_src = "full"
+    t2 = time.time()
+
+    mem = full["mem"]
+    peak_bytes = None
+    if mem is not None and hasattr(mem, "temp_size_in_bytes"):
+        peak_bytes = (
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        )
+    cost = {"flops": flops, "bytes accessed": byts}
+    rl = roofline_report(arch, shape_name, mesh_name, chips, cost, "",
+                         full["cfg"], full["shape"], peak_bytes=peak_bytes)
+    rl.coll_bytes_per_dev = float(coll_total)
+    row = rl.row()
+    row.update(
+        status="ok",
+        compile_s=round(t1 - t0, 1),
+        cost_compile_s=round(t2 - t1, 1),
+        cost_source=cost_src,
+        n_periods=P,
+        collectives={k: v for k, v in coll_detail.items() if v},
+        memory={
+            a: int(getattr(mem, a))
+            for a in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if mem is not None and hasattr(mem, a)
+        },
+        ax=(ax.mult_name if ax else None),
+    )
+    if verbose:
+        print(json.dumps(row, default=float))
+        sys.stdout.flush()
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--ax", action="store_true",
+                    help="SWAPPER approximate-matmul mode (mxu backend)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--pad-vocab", type=int, default=1)
+    ap.add_argument("--dp-only", action="store_true")
+    ap.add_argument("--patch", default=None,
+                    help="JSON dict of ModelConfig field overrides")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--seq-shard", type=int, default=1)
+    ap.add_argument("--remat", default="layer")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args()
+
+    par = ParallelConfig(fsdp=bool(args.fsdp), seq_shard=bool(args.seq_shard),
+                         remat=args.remat, grad_accum=args.grad_accum,
+                         dp_only=args.dp_only)
+    ax = AxPolicy(backend="mxu") if args.ax else None
+    cfg_patch = dict(json.loads(args.patch)) if args.patch else {}
+    if args.pad_vocab > 1:
+        cfg_patch["pad_vocab_multiple"] = args.pad_vocab
+    cfg_patch = cfg_patch or None
+
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    rows = []
+    fail = 0
+    for a, s, mp in cells:
+        try:
+            rows.append(run_cell(a, s, mp, par, ax, cfg_patch=cfg_patch,
+                                 extrapolate=not args.no_extrapolate))
+        except Exception as e:
+            fail += 1
+            rows.append({"arch": a, "shape": s,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "status": "error", "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]})
+            print(json.dumps(rows[-1]))
+            sys.stdout.flush()
+    if args.out:
+        with open(args.out, "w") as f:
+            for r in rows:
+                f.write(json.dumps(r, default=float) + "\n")
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skip")
+    print(f"\n== dry-run: {ok} ok, {sk} skipped, {fail} failed, "
+          f"{len(rows)} cells ==")
+    sys.exit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb profiling aid: dump the largest collective/fusion ops of a
+compiled dry-run cell (the 'profile' of DESIGN.md §8 — no real hardware).
+
+    PYTHONPATH=src python -m repro.launch.hlo_analyze --arch mamba2-370m \
+        --shape train_4k [--fsdp 0] [--top 25]
+"""
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, ParallelConfig
+from repro.configs.base import AxPolicy
+
+from .dryrun import build_cell
+from .mesh import make_production_mesh
+from .roofline import _SHAPE_RE, _shape_bytes
+
+
+def top_ops(hlo_text: str, top: int = 25):
+    rows = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?([\w.\-]+)\s*=\s*(\([^)]*\)|[^=]*?)\s*([\w\-]+)\(", s)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        if op in ("parameter", "constant", "get-tuple-element", "tuple", "bitcast"):
+            continue
+        b = _shape_bytes(shape_str)
+        if b:
+            rows.append((b, op, name, shape_str[:90], s[:220]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--seq-shard", type=int, default=1)
+    ap.add_argument("--remat", default="layer")
+    ap.add_argument("--ax", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--collectives-only", action="store_true")
+    args = ap.parse_args()
+
+    par = ParallelConfig(fsdp=bool(args.fsdp), seq_shard=bool(args.seq_shard),
+                         remat=args.remat)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cfg = ARCHS[args.arch]
+    ax = AxPolicy(backend="mxu") if args.ax else None
+    fn, shapes, in_sh, cfg2, shp = build_cell(cfg, args.shape, mesh, par, ax)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*shapes).compile()
+    hlo = compiled.as_text()
+
+    agg = defaultdict(lambda: [0, 0])
+    for b, op, *_ in top_ops(hlo, top=10**6):
+        agg[op][0] += b
+        agg[op][1] += 1
+    print("== per-op-kind totals (output bytes, count) ==")
+    for op, (b, c) in sorted(agg.items(), key=lambda kv: -kv[1][0])[:20]:
+        print(f"  {op:28s} {b/1e9:10.3f} GB  x{c}")
+
+    print("\n== largest individual ops ==")
+    shown = 0
+    for b, op, name, shape_str, line in top_ops(hlo, top=10**4):
+        if args.collectives_only and not any(
+            op.startswith(c) for c in ("all-", "reduce-scatter", "collective")
+        ):
+            continue
+        print(f"  {b/1e9:9.3f} GB {op:24s} {shape_str}")
+        shown += 1
+        if shown >= args.top:
+            break
+
+
+if __name__ == "__main__":
+    main()

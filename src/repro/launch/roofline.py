@@ -1,0 +1,190 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §8).
+
+Hardware constants (TPU v5e-class, per guided spec):
+    197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+compute  term = per-device HLO FLOPs / peak
+memory   term = per-device HLO bytes accessed / HBM bandwidth
+collective term = per-device collective operand bytes (parsed from the
+post-SPMD HLO) / ICI link bandwidth
+
+MODEL_FLOPS (6·N·D train / 2·N·tokens serve) over total compiled FLOPs is
+the usefulness ratio — it catches remat/redundant-compute waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "collective_bytes", "roofline_report", "model_flops", "param_count"]
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+HW = dict(peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,4096]' -> bytes.  Tuples handled by the caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in a (post-SPMD,
+    per-device) HLO module.  Returns {op_kind: bytes} + '_total'."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # ops look like:  %x = bf16[8,128]{1,0} all-gather(...), replica_groups=...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*([\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        out[kind] += _shape_bytes(m.group(1))
+    out["_total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def param_count(cfg) -> int:
+    """Analytic parameter count (total / active for MoE)."""
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    embed = V * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        din = cfg.ssm_expand * D
+        per = D * din * 2 + D * (2 * cfg.ssm_state) + D * (din // cfg.ssm_head_dim) + din * D
+        return embed + L * per
+    hd = cfg.head_dim_
+    attn = D * cfg.n_heads * hd + 2 * D * cfg.n_kv_heads * hd + cfg.n_heads * hd * D
+    mlp_mult = 3 if cfg.act == "silu" else 2
+    total = embed
+    active = embed
+    for kind in cfg.layer_kinds():
+        if kind == "recurrent":
+            R = cfg.d_rnn
+            t = 2 * D * R + 2 * R * R + R * D
+        else:
+            t = attn
+        if cfg.family == "moe" and kind != "dense_ffn":
+            e_all = cfg.n_experts * mlp_mult * D * cfg.moe_d_ff
+            e_act = (cfg.top_k + cfg.n_shared_experts) * mlp_mult * D * cfg.moe_d_ff
+            total += t + e_all + D * cfg.n_experts
+            active += t + e_act
+            continue
+        ff = mlp_mult * D * cfg.d_ff
+        total += t + ff
+        active += t + ff
+    if cfg.family == "encdec":
+        # encoder layers (attn + mlp) + decoder cross-attn already excluded;
+        # approximate: encoder adds n_enc_layers * (attn + mlp), decoder adds
+        # cross-attn per layer
+        total += cfg.n_enc_layers * (attn + mlp_mult * D * cfg.d_ff) + L * attn
+        active = total
+    return int(total if cfg.family != "moe" else active)
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D for train (N_active for MoE), 2*N*tokens for serving."""
+    n = param_count(cfg)
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        return 6.0 * n * toks
+    return 2.0 * n * toks
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops: float
+    peak_bytes_per_dev: Optional[float] = None
+
+    @property
+    def t_compute(self):
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self):
+        total = self.flops_per_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """fraction of the compute roofline achieved at the bound:
+        (useful model FLOP time at peak) / (dominant term time)."""
+        t_model = self.model_flops / self.chips / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_model / t_bound if t_bound else 0.0
+
+    def row(self):
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh, chips=self.chips,
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, dominant=self.dominant,
+            model_flops=self.model_flops, hlo_flops_per_dev=self.flops_per_dev,
+            useful_ratio=self.useful_ratio,
+            roofline_fraction=self.roofline_fraction,
+            peak_bytes_per_dev=self.peak_bytes_per_dev,
+        )
+
+
+def roofline_report(arch, shape, mesh_name, chips, cost, hlo_text, cfg, shape_cfg,
+                    peak_bytes=None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)["_total"]
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_dev=flops, bytes_per_dev=byts, coll_bytes_per_dev=float(coll),
+        model_flops=model_flops(cfg, shape_cfg), peak_bytes_per_dev=peak_bytes,
+    )

@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Parameters and activations are annotated with *logical* axis names; this
+module maps them to mesh axes:
+
+    batch   -> ('pod', 'data') on the multi-pod mesh, ('data',) single-pod
+    embed   -> 'data' when FSDP is on (2-D weight sharding), else replicated
+    heads/ff/vocab/experts -> 'model'   (tensor/expert parallelism)
+    seq     -> 'model' when sequence-parallel residuals are on
+    kv_seq  -> 'model'                  (decode KV-cache sequence sharding)
+
+``set_mesh_ctx`` installs a mesh + rules for the duration of a lowering;
+``shard()`` is a no-op outside of it, so models run unmodified on one device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+
+__all__ = ["axis_rules", "set_mesh_ctx", "shard", "spec_for", "param_spec", "current_mesh"]
+
+_ctx = threading.local()
+
+
+def axis_rules(mesh: Mesh, par: ParallelConfig) -> dict:
+    if par.dp_only:
+        # small models: no tensor parallelism — the 'model' axis joins the
+        # batch (pure DP), parameters FSDP-shard over 'data'
+        batch_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        return {
+            "batch": batch_axes,
+            "embed": "data" if par.fsdp else None,
+            "heads": None, "kv_heads": None, "ff": None, "vocab": None,
+            "experts": "model" if par.ep else None,
+            "seq": None, "kv_seq": None, "layers": None, None: None,
+        }
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return {
+        "batch": batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None),
+        "embed": "data" if par.fsdp else None,
+        "heads": "model",
+        "kv_heads": None,        # GQA kv-head counts often < mesh model size
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model" if par.ep else None,
+        "seq": "model" if par.seq_shard else None,
+        "kv_seq": "model",
+        "layers": None,
+        None: None,
+    }
+
+
+@contextlib.contextmanager
+def set_mesh_ctx(mesh: Mesh, par: ParallelConfig):
+    rules = axis_rules(mesh, par)
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield rules
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def _dedup(parts):
+    """A mesh axis may appear at most once in a PartitionSpec: keep the first
+    occurrence (e.g. MoE expert weights shard 'experts' over model; the 'ff'
+    dim then stays unsharded)."""
+    seen = set()
+    out = []
+    for ax in parts:
+        names = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        if any(n in seen for n in names):
+            out.append(None)
+        else:
+            seen.update(names)
+            out.append(ax)
+    return out
+
+
+def spec_for(logical_axes: Tuple, rules=None) -> P:
+    if rules is None:
+        st = getattr(_ctx, "state", None)
+        if st is None:
+            return P()
+        rules = st[1]
+    return P(*_dedup([rules.get(a, None) for a in logical_axes]))
+
+
+def shard(x, *logical_axes):
+    """with_sharding_constraint by logical axes; no-op without a mesh ctx."""
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return x
+    mesh, rules = st
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = spec_for(tuple(logical_axes), rules)
+    # drop constraints that do not divide the dimension (e.g. 8 kv heads on a
+    # 16-way model axis): replace by None on that dim
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        names = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        size = 1
+        for nm in names:
+            size *= mesh.shape[nm]
+        fixed.append(ax if size and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+def param_spec(logical_axes: Tuple, mesh: Mesh, par: ParallelConfig, shape=None) -> P:
+    """PartitionSpec for a parameter, dropping non-divisible constraints and
+    deduplicating repeated mesh axes (first occurrence wins)."""
+    rules = axis_rules(mesh, par)
+    spec = _dedup([rules.get(a, None) for a in logical_axes])
+    if shape is not None:
+        for i, (dim, ax) in enumerate(zip(shape, spec)):
+            names = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+            size = 1
+            for nm in names:
+                size *= mesh.shape[nm]
+            if size == 0 or dim % size != 0:
+                spec[i] = None
+    return P(*spec)
+
+
+

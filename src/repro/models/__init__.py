@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures over a generic decoder stack
+(dense/moe/hybrid/ssm/vlm) plus a whisper-style encoder-decoder."""
+from .registry import decode_step, init_cache, init_params, input_specs, prefill, train_loss
+
+__all__ = ["decode_step", "init_cache", "init_params", "input_specs", "prefill", "train_loss"]

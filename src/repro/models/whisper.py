@@ -1,0 +1,186 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend is a STUB:
+inputs are precomputed frame embeddings, per the assignment).  LayerNorm +
+biases + gelu MLPs + learned decoder positions, sinusoidal encoder positions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.launch.sharding import shard
+
+from .layers import (
+    attn_apply,
+    attn_init,
+    dense,
+    layernorm,
+    mlp_apply,
+    mlp_init,
+    ninit,
+    sinusoid_pos,
+)
+
+__all__ = ["init_params", "forward", "init_cache"]
+
+MAX_DEC_POS = 1 << 16
+
+
+def _ln_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": _ln_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln2": _ln_init(cfg.d_model),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu", dtype, bias=True),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": _ln_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln_x": _ln_init(cfg.d_model),
+        "xattn": attn_init(ks[1], cfg, dtype),
+        "ln2": _ln_init(cfg.d_model),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu", dtype, bias=True),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_enc_layers)
+    )
+    dec = jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(
+        jax.random.split(ks[1], cfg.n_layers)
+    )
+    return {
+        "embed": {"w": ninit(ks[2], (cfg.padded_vocab, cfg.d_model), dtype, scale=0.02)},
+        "pos_embed": {"w": ninit(ks[3], (MAX_DEC_POS, cfg.d_model), dtype, scale=0.01)},
+        "layers_enc": enc,
+        "layers_dec": dec,
+        "ln_enc": _ln_init(cfg.d_model),
+        "ln_f": _ln_init(cfg.d_model),
+    }
+
+
+def _encode(params, frames, cfg, par):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dtype) + sinusoid_pos(frames.shape[1], cfg.d_model, dtype)[None]
+    x = shard(x, "batch", "seq", None)
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, p):
+        h = layernorm(x, p["ln1"], cfg.norm_eps)
+        a, _ = attn_apply(p["attn"], h, cfg, pos=pos, inv_freq=None,
+                          causal=False, mode="train")
+        x = x + a
+        h = layernorm(x, p["ln2"], cfg.norm_eps)
+        x = shard(x + mlp_apply(p["mlp"], h, "gelu", cfg.ax), "batch", "seq", None)
+        return x, 0
+
+    x, _ = jax.lax.scan(body, x, params["layers_enc"])
+    return layernorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_layer(p, x, cfg, *, pos, enc_kv, mode, cache, cache_index, max_cache_len):
+    h = layernorm(x, p["ln1"], cfg.norm_eps)
+    a, new_self = attn_apply(p["attn"], h, cfg, pos=pos, inv_freq=None, causal=True,
+                             mode=mode, cache=cache["self"] if cache else None,
+                             cache_index=cache_index, max_cache_len=max_cache_len)
+    x = x + a
+    h = layernorm(x, p["ln_x"], cfg.norm_eps)
+    a, _ = attn_apply(p["xattn"], h, cfg, pos=pos, inv_freq=None, causal=False,
+                      mode="decode" if mode == "decode" else "train",
+                      cross_kv=enc_kv)
+    x = x + a
+    h = layernorm(x, p["ln2"], cfg.norm_eps)
+    x = shard(x + mlp_apply(p["mlp"], h, "gelu", cfg.ax), "batch", "seq", None)
+    return x, new_self
+
+
+def _cross_kv(p, enc_out, cfg):
+    """Precompute per-layer cross-attention K/V from encoder states."""
+    B, S, _ = enc_out.shape
+    hd = cfg.head_dim_
+    k = dense(enc_out, p["xattn"]["k"], cfg.ax, "attn_qkv").reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(enc_out, p["xattn"]["v"], cfg.ax, "attn_qkv").reshape(B, S, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.head_dim_
+    L = cfg.n_layers
+    self_c = {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+    cross = jnp.zeros((L, 2, batch, enc_len, cfg.n_kv_heads, hd), dtype)
+    return {"self": self_c, "cross": cross}
+
+
+def forward(params, batch, cfg: ModelConfig, par: Optional[ParallelConfig] = None,
+            *, mode="train", cache=None, cache_index=None, max_cache_len=0):
+    """batch: {'frames': (B,T,D) stub embeddings, 'tokens': (B,S)} for
+    train/prefill; decode uses cached cross-K/V."""
+    par = par or ParallelConfig()
+    dtype = jnp.dtype(cfg.compute_dtype)
+
+    if mode == "decode":
+        enc_kv_all = cache["cross"]          # (L, 2, B, S_enc, KV, hd) stacked
+    else:
+        enc_out = _encode(params, batch["frames"], cfg, par)
+        enc_kv_all = jax.vmap(lambda p: jnp.stack(_cross_kv(p, enc_out, cfg)))(
+            params["layers_dec"]
+        )
+
+    tok = batch["tokens"]
+    B, S = tok.shape
+    if mode == "decode":
+        pos_idx = jnp.full((B, 1), cache_index, jnp.int32)
+    else:
+        pos_idx = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = jnp.take(params["embed"]["w"], tok, axis=0).astype(dtype)
+    x = x + jnp.take(params["pos_embed"]["w"], pos_idx, axis=0).astype(dtype)
+    x = shard(x, "batch", "seq", None)
+
+    def body(carry, xs):
+        x = carry
+        p, ekv, cc = xs
+        enc_kv = (ekv[0], ekv[1])
+        x, new_self = _dec_layer(
+            p, x, cfg, pos=pos_idx, enc_kv=enc_kv, mode=mode,
+            cache={"self": cc} if mode == "decode" else None,
+            cache_index=cache_index, max_cache_len=max_cache_len,
+        )
+        return x, (new_self if mode != "train" else 0)
+
+    if mode == "decode":
+        xs = (params["layers_dec"], enc_kv_all, cache["self"])
+    else:
+        L = cfg.n_layers
+        xs = (params["layers_dec"], enc_kv_all,
+              jnp.zeros((L,), jnp.float32))
+    x, ys = jax.lax.scan(body, x, xs)
+
+    x = layernorm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"].astype(x.dtype))
+    logits = shard(logits, "batch", None, "vocab")  # vocab-parallel loss
+
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"self": ys, "cross": enc_kv_all}
+    elif mode == "decode":
+        new_cache = {"self": ys, "cross": enc_kv_all}
+    return logits, new_cache, jnp.zeros((), jnp.float32)

@@ -1,0 +1,3 @@
+from .ax import ax_dense, quantize_rows, separable_transforms
+
+__all__ = ["ax_dense", "quantize_rows", "separable_transforms"]

@@ -1,0 +1,186 @@
+"""SWAPPER approximate matmul as a first-class LM projection (DESIGN.md §5).
+
+Three backends:
+
+* ``mxu`` — **beyond-paper production path**.  For *separable* multiplier
+  families, m(a, b) = f(a) * g(b) elementwise (operand truncation zeroes low
+  bits of each operand; partial-product perforation zeroes rows of B), so the
+  approximate inner product factorizes into exact matmuls of transformed int8
+  operands — which run on the MXU:
+
+      NoSwap:        C = f(A) @ g(B)                       (1 int8 matmul)
+      swap on A bit: C = (s⊙g(A)) @ f(B) + ((1-s)⊙f(A)) @ g(B)
+      swap on B bit: C = g(A) @ (s⊙f(B)) + f(A) @ ((1-s)⊙g(B))
+                                                           (2 int8 matmuls)
+
+  where s is the SWAPPER bit mask of the decision operand.  This turns the
+  paper's per-multiply mechanism into MXU-rate compute instead of a VPU
+  elementwise pipeline — bit-identical to the Pallas kernel (tested).
+
+* ``kernel`` — the Pallas ``ax_matmul`` VPU kernel (arbitrary families,
+  including LUT circuits).
+
+* ``emul`` — pure-jnp reference (small shapes / tests).
+
+Training uses a straight-through estimator: forward = approximate quantized
+matmul, backward = exact matmul gradients.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AxPolicy
+from repro.core import multipliers as M
+from repro.core.swapper import SwapConfig
+
+__all__ = ["ax_dense", "quantize_rows", "separable_transforms", "ax_matmul_int"]
+
+
+# ---------------------------------------------------------------------------
+# separable closed forms
+# ---------------------------------------------------------------------------
+
+def _trunc_t(k):
+    mask = jnp.int32(~((1 << k) - 1))
+
+    def f(x):  # sign-magnitude low-bit truncation (matches multipliers.trunc)
+        neg = x < 0
+        mag = jnp.where(neg, -x, x) & mask
+        return jnp.where(neg, -mag, mag)
+
+    return f
+
+
+def separable_transforms(mult_name: str) -> Optional[Tuple[Callable, Callable]]:
+    """(f, g) with m(a,b) = f(a)*g(b), or None if the family is inseparable."""
+    base = mult_name.split("_", 1)[1] if "_" in mult_name else mult_name
+    if base.startswith("trunc"):
+        ka, kb = (int(v) for v in base[len("trunc"):].split("_"))
+        return _trunc_t(ka), _trunc_t(kb)
+    if base.startswith("perf"):
+        rows = tuple(int(v) for v in base[len("perf"):].split("_"))
+        rowmask = 0
+        for r in rows:
+            rowmask |= 1 << r
+        inv = jnp.int32(~rowmask)
+
+        def g(x):
+            neg = x < 0
+            mag = jnp.where(neg, -x, x) & inv
+            return jnp.where(neg, -mag, mag)
+
+        return (lambda x: x), g
+    return None
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization
+# ---------------------------------------------------------------------------
+
+def quantize_rows(x, axis=-1):
+    """Symmetric per-row int8 quantization along ``axis``."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _swap_mask(x_i32, cfg: SwapConfig):
+    return (((x_i32 >> cfg.bit) & 1) == cfg.value)
+
+
+def _int_mm(a, b):
+    """Exact int8 matmul with int32 accumulation (MXU-native on TPU)."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def ax_matmul_int(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
+    """Approximate int matmul (..., K) @ (K, N) -> (..., N) int32."""
+    mult = M.get(policy.mult_name)
+    swap = policy.swap
+    if policy.backend == "mxu":
+        sep = separable_transforms(policy.mult_name)
+        assert sep is not None, f"{policy.mult_name} is not separable; use backend='kernel'"
+        f, g = sep
+        ai = a_i8.astype(jnp.int32)
+        bi = b_i8.astype(jnp.int32)
+        if swap is None:
+            return _int_mm(f(ai).astype(jnp.int8), g(bi).astype(jnp.int8))
+        if swap.operand == "A":
+            s = _swap_mask(ai, swap).astype(jnp.int32)
+            a1 = (s * g(ai)).astype(jnp.int8)          # swapped rows take g
+            a2 = ((1 - s) * f(ai)).astype(jnp.int8)
+            return _int_mm(a1, f(bi).astype(jnp.int8)) + _int_mm(a2, g(bi).astype(jnp.int8))
+        s = _swap_mask(bi, swap).astype(jnp.int32)
+        b1 = (s * f(bi)).astype(jnp.int8)
+        b2 = ((1 - s) * g(bi)).astype(jnp.int8)
+        return _int_mm(g(ai).astype(jnp.int8), b1) + _int_mm(f(ai).astype(jnp.int8), b2)
+    if policy.backend == "kernel":
+        from repro.kernels import ax_matmul as kernel_mm
+
+        lead = a_i8.shape[:-1]
+        a2d = a_i8.reshape(-1, a_i8.shape[-1])
+        m0, k0 = a2d.shape
+        n0 = b_i8.shape[-1]
+
+        def _pad(v, mult_, axis):
+            pad = (-v.shape[axis]) % mult_
+            if pad == 0:
+                return v
+            widths = [(0, 0)] * v.ndim
+            widths[axis] = (0, pad)
+            return jnp.pad(v, widths)
+
+        bm = min(128, m0)
+        bn = min(128, n0)
+        bk = min(128, k0)
+        a2d = _pad(_pad(a2d, bm, 0), bk, 1)
+        bp = _pad(_pad(b_i8, bk, 0), bn, 1)
+        out = kernel_mm(a2d, bp, mult, swap, block_m=bm, block_n=bn, block_k=bk)
+        return out[:m0, :n0].reshape(*lead, n0)
+    # 'emul'
+    from repro.kernels.ref import ax_matmul_ref
+
+    lead = a_i8.shape[:-1]
+    a2d = a_i8.reshape(-1, a_i8.shape[-1])
+    return ax_matmul_ref(a2d, b_i8, mult, swap).reshape(*lead, b_i8.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# the projection layer
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ax_dense(x, w, policy: AxPolicy):
+    """y = x @ w through the SWAPPER approximate path (quantize -> ax matmul
+    -> dequantize); straight-through exact gradients for training."""
+    return _ax_dense_fwd_impl(x, w, policy)
+
+
+def _ax_dense_fwd_impl(x, w, policy):
+    xq, sx = quantize_rows(x.astype(jnp.float32), axis=-1)
+    wq, sw = quantize_rows(w.astype(jnp.float32), axis=0)
+    acc = ax_matmul_int(xq, wq, policy)
+    return (acc.astype(jnp.float32) * sx * sw).astype(x.dtype)
+
+
+def _ax_dense_fwd(x, w, policy):
+    return _ax_dense_fwd_impl(x, w, policy), (x, w)
+
+
+def _ax_dense_bwd(policy, res, gy):
+    x, w = res
+    gy32 = gy.astype(jnp.float32)
+    gx = (gy32 @ w.astype(jnp.float32).T).astype(x.dtype)
+    xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    gw = (xf.T @ gy32.reshape(-1, gy.shape[-1])).astype(w.dtype)
+    return gx, gw
+
+
+ax_dense.defvjp(_ax_dense_fwd, _ax_dense_bwd)

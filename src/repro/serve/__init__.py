@@ -1,0 +1,3 @@
+from .engine import ServeConfig, generate
+
+__all__ = ["ServeConfig", "generate"]

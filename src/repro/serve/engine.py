@@ -1,0 +1,53 @@
+"""Batched serving loop: prefill once, then greedy/temperature decode steps
+against the sharded KV cache."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import decode_step, prefill
+
+__all__ = ["ServeConfig", "generate"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0   # 0 => greedy
+    seed: int = 0
+
+
+def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
+             par: Optional[ParallelConfig] = None):
+    """prompt_batch: {'tokens': (B, S)} (or family-specific prefill inputs).
+    Returns (B, max_new_tokens) int32."""
+    S = (prompt_batch["tokens"].shape[1] if "tokens" in prompt_batch
+         else prompt_batch["embeds"].shape[1])
+    B = jax.tree.leaves(prompt_batch)[0].shape[0]
+    max_len = S + scfg.max_new_tokens + 1
+
+    logits, cache = prefill(params, prompt_batch, cfg, par, max_cache_len=max_len)
+    key = jax.random.PRNGKey(scfg.seed)
+
+    def sample(logits, key):
+        lg = logits[:, -1].astype(jnp.float32)
+        if scfg.temperature > 0:
+            return jax.random.categorical(key, lg / scfg.temperature, axis=-1)
+        return jnp.argmax(lg, axis=-1)
+
+    tok = sample(logits, key)
+    out = [tok]
+    step_fn = jax.jit(
+        lambda p, c, t, i: decode_step(p, c, t, i, cfg, par),
+        static_argnames=(),
+    )
+    for i in range(scfg.max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = step_fn(params, cache, tok[:, None], jnp.int32(S + i))
+        tok = sample(logits, sub)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

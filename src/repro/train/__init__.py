@@ -1,0 +1,13 @@
+from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .data import DataConfig, FileStream, SyntheticStream, make_batch_specs
+from .fault import FaultConfig, SimulatedFailure, StragglerWatchdog, run_supervised
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .train_step import init_train_state, make_train_step
+
+__all__ = [
+    "AsyncCheckpointer", "latest_step", "restore", "save",
+    "DataConfig", "FileStream", "SyntheticStream", "make_batch_specs",
+    "FaultConfig", "SimulatedFailure", "StragglerWatchdog", "run_supervised",
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "init_train_state", "make_train_step",
+]

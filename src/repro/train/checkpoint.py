@@ -1,0 +1,113 @@
+"""Checkpointing: atomic, async-capable, reshard-on-restore (elastic).
+
+Format: one ``.npz`` with flattened '/'-joined tree paths + a json manifest
+(step, data-pipeline state, tree structure).  Writes go to a temp file and
+are atomically renamed, so a crash mid-save never corrupts the latest
+checkpoint; an optional background thread makes saves non-blocking
+(train-loop overlap).  ``restore`` device_puts onto the *current* mesh
+sharding, so a job restarted on a different mesh shape (elastic scaling)
+resharding happens transparently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, state, extra: Optional[dict] = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.npz")
+    final = os.path.join(ckpt_dir, f"step_{step}.npz")
+    # npz entry names cannot contain some chars reliably; index them
+    names = sorted(flat)
+    np.savez(tmp, **{f"a{i}": flat[k] for i, k in enumerate(names)})
+    os.replace(tmp, final)
+    manifest = {
+        "step": step,
+        "names": names,
+        "extra": extra or {},
+        "dtypes": {k: str(flat[k].dtype) for k in names},
+    }
+    mtmp = os.path.join(ckpt_dir, f".tmp_step_{step}.json")
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, os.path.join(ckpt_dir, f"step_{step}.json"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for fn in os.listdir(ckpt_dir):
+        if fn.startswith("step_") and fn.endswith(".json"):
+            steps.append(int(fn[len("step_"):-len(".json")]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, sharding_tree=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``sharding_tree`` (same structure) triggers
+    device_put with the current mesh's shardings — elastic resharding."""
+    with open(os.path.join(ckpt_dir, f"step_{step}.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(ckpt_dir, f"step_{step}.npz"))
+    flat = {k: data[f"a{i}"] for i, k in enumerate(manifest["names"])}
+
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    shard_leaves = (
+        jax.tree_util.tree_flatten(sharding_tree)[0] if sharding_tree is not None
+        else [None] * len(paths)
+    )
+    out = []
+    for pth, lk, sh in zip(paths, leaves_like, shard_leaves):
+        arr = flat[pth]
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Background-thread saver: snapshot to host, return immediately."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, ckpt_dir: str, step: int, state, extra=None):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+
+        def _work():
+            save(ckpt_dir, step, host_state, extra)
+
+        self._thread = threading.Thread(target=_work, daemon=True)
+        self._thread.start()

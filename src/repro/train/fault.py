@@ -1,0 +1,113 @@
+"""Fault tolerance: restart supervision, straggler watchdog, elastic resume.
+
+On a real cluster the runtime signals (preemption notice, missing heartbeat,
+slow-step detection) come from the orchestration layer; this module provides
+the *framework side*: a supervised run loop that checkpoints periodically,
+survives worker death (simulated or real exceptions), restores the newest
+checkpoint — potentially onto a different mesh (elastic) — and resumes the
+data pipeline bit-identically.  The straggler watchdog flags steps exceeding
+a deadline multiple of the trailing median so schedulers can rebalance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from . import checkpoint as ckpt_lib
+
+__all__ = ["FaultConfig", "StragglerWatchdog", "SimulatedFailure", "run_supervised"]
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by tests / chaos hooks to simulate a worker crash."""
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 10
+    max_restarts: int = 3
+    step_deadline_factor: float = 3.0   # straggler threshold vs trailing median
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float = 3.0, history: int = 32):
+        self.factor = factor
+        self.times = []
+        self.history = history
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        """Record a step time; True if this step straggled."""
+        import statistics
+
+        slow = False
+        if len(self.times) >= 5:
+            med = statistics.median(self.times[-self.history:])
+            slow = dt > self.factor * med
+            if slow:
+                self.flagged += 1
+        self.times.append(dt)
+        return slow
+
+
+def run_supervised(
+    make_state: Callable[[], dict],
+    step_fn: Callable,
+    stream,
+    n_steps: int,
+    fcfg: FaultConfig,
+    chaos: Optional[Callable[[int], None]] = None,
+    on_step=None,
+):
+    """Run n_steps with periodic checkpoints; on failure, restore and resume.
+
+    ``chaos(step)`` may raise SimulatedFailure to exercise the recovery path.
+    Returns (state, log) where log records restarts and straggler flags.
+    """
+    log = {"restarts": 0, "stragglers": 0, "steps_run": 0}
+    saver = ckpt_lib.AsyncCheckpointer()
+    watchdog = StragglerWatchdog(fcfg.step_deadline_factor)
+
+    state = None
+    restarts = 0
+    while True:
+        try:
+            if state is None:
+                state = make_state()
+                last = ckpt_lib.latest_step(fcfg.ckpt_dir)
+                start = 0
+                if last is not None:
+                    state, extra = ckpt_lib.restore(fcfg.ckpt_dir, last, state)
+                    stream.restore(extra["data"])
+                    start = int(extra["train_step"])
+            else:
+                start = log["steps_run"]
+
+            for i in range(start, n_steps):
+                if chaos is not None:
+                    chaos(i)
+                t0 = time.monotonic()
+                batch = stream.next()
+                state, metrics = step_fn(state, batch)
+                dt = time.monotonic() - t0
+                if watchdog.observe(dt):
+                    log["stragglers"] += 1
+                log["steps_run"] = i + 1
+                if on_step is not None:
+                    on_step(i, metrics)
+                if (i + 1) % fcfg.ckpt_every == 0:
+                    saver.save_async(
+                        fcfg.ckpt_dir, i + 1, state,
+                        extra={"train_step": i + 1, "data": stream.state()},
+                    )
+            saver.wait()
+            return state, log
+        except SimulatedFailure:
+            restarts += 1
+            log["restarts"] = restarts
+            if restarts > fcfg.max_restarts:
+                raise
+            saver.wait()
+            state = None          # full restart: rebuild + restore newest ckpt

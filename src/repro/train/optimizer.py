@@ -1,0 +1,82 @@
+"""AdamW with global-norm clipping and an optional gradient-compression path
+(bf16 moment/gradient storage with float32 error feedback) — the
+distributed-optimization tricks the train loop composes with grad
+accumulation and FSDP sharding."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    compress: str = "none"   # 'none' | 'bf16' (grads+moments in bf16 + error feedback)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    mdtype = jnp.bfloat16 if cfg.compress == "bf16" else jnp.float32
+    zeros_like = lambda p: jnp.zeros(p.shape, mdtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like, params),
+        "v": jax.tree.map(zeros_like, params),
+    }
+    if cfg.compress == "bf16":
+        # error-feedback accumulator keeps the quantization residual in f32
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = cfg.lr * jnp.minimum(1.0, step.astype(jnp.float32) / max(cfg.warmup, 1))
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    if cfg.compress == "bf16":
+        # error feedback: g_q = bf16(g + ef); ef' = (g + ef) - g_q
+        summed = jax.tree.map(lambda g, e: g + e, grads, state["ef"])
+        gq = jax.tree.map(lambda s: s.astype(jnp.bfloat16), summed)
+        new_ef = jax.tree.map(lambda s, q: s - q.astype(jnp.float32), summed, gq)
+        grads = jax.tree.map(lambda q: q.astype(jnp.float32), gq)
+
+    def upd(g, m, v, p):
+        m32 = m.astype(jnp.float32)
+        v32 = v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * g * g
+        mhat = m_new / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if cfg.compress == "bf16":
+        new_state["ef"] = new_ef
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

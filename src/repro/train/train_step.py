@@ -1,0 +1,63 @@
+"""The jit'd training step: loss + grad + AdamW, with microbatch gradient
+accumulation, buffer donation, and logical-axis sharded state."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import train_loss
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "init_train_state"]
+
+
+def init_train_state(params, opt_cfg: AdamWConfig):
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+def make_train_step(cfg: ModelConfig, par: ParallelConfig, opt_cfg: AdamWConfig):
+    """Returns step(state, batch) -> (state, metrics).  With
+    par.grad_accum = k, the global batch is split into k microbatches and
+    gradients are accumulated in f32 (collectives overlap with compute under
+    GSPMD since the accumulation is a scan)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = train_loss(params, batch, cfg, par)
+        return loss, metrics
+
+    def step(state, batch):
+        params = state["params"]
+        k = par.grad_accum
+        if k <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            def micro(c, mb):
+                g_acc, l_acc = c
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, jax.tree.map(
+                    lambda x: x.astype(jnp.float32), g)), l_acc + l), None
+
+            def split(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+            micro_batches = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (g0, 0.0), micro_batches)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = loss_sum / k
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, opt_cfg
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

@@ -1,0 +1,90 @@
+"""AxBench-in-JAX application tests: precise-FxP fidelity, approximation
+degradation, SWAPPER recovery, and tuner behaviour."""
+import numpy as np
+import pytest
+
+import repro.apps as A
+import repro.core as C
+
+FAST_N = {"ssim": 48, "are": 128, "miss_rate": 128}
+
+
+@pytest.mark.parametrize("name", sorted(A.ALL_APPS))
+def test_fxp_close_to_original(name):
+    """Paper Table II 'FxP' row: fixed-point conversion degrades only mildly."""
+    app = A.ALL_APPS[name]
+    v, out = A.evaluate(app, "fxp", n=FAST_N[app.metric_name], seed=1234)
+    assert np.isfinite(v)
+    if app.metric_name == "ssim":
+        assert v > 0.9
+    elif app.metric_name == "are":
+        assert v < 0.02
+    else:
+        assert v < 0.02
+
+
+@pytest.mark.parametrize("name", sorted(A.ALL_APPS))
+def test_approximation_degrades(name):
+    """NoSwap approximate version is measurably worse than precise FxP."""
+    app = A.ALL_APPS[name]
+    mult = C.get("mul16s_mitch10_13")
+    n = FAST_N[app.metric_name]
+    v_fxp, _ = A.evaluate(app, "fxp", n=n, seed=1234)
+    v_ax, _ = A.evaluate(app, None, mult=mult, n=n, seed=1234)
+    if app.minimize:
+        assert v_ax > v_fxp
+    else:
+        assert v_ax < v_fxp
+
+
+def test_swapper_recovers_jpeg():
+    """App-level tuned SWAPPER never hurts on train (NoSwap is a candidate)
+    and the recovered config is near-NoSwap-or-better on the test split
+    (paper Fig. 2 protocol: tune on train inputs, report on test)."""
+    app = A.ALL_APPS["jpeg"]
+    mult = C.get("mul16s_bam_v4_h1")
+    cfg, train_val, table = A.tune_app(app, mult, n=48, seed=42)
+    assert train_val >= table[None]  # tuning includes NoSwap; can only help
+    v_nosw, _ = A.evaluate(app, None, mult=mult, n=48, seed=1234)
+    v_app, _ = A.evaluate(app, cfg, mult=mult, n=48, seed=1234)
+    assert v_app >= v_nosw - 0.02  # small generalization slack
+
+
+def test_app_tuner_consistency():
+    """The tuner's reported train metric matches re-evaluating the chosen
+    config on the train inputs."""
+    app = A.ALL_APPS["blackscholes"]
+    mult = C.get("mul16s_drum5_8")
+    cfg, val, table = A.tune_app(app, mult, n=128, seed=42)
+    v, _ = A.evaluate(app, cfg, mult=mult, n=128, seed=42)
+    assert v == pytest.approx(val, rel=1e-6)
+    assert len(table) == 4 * 16 + 1  # the full 4M space + NoSwap candidate
+    assert min(table.values()) == pytest.approx(val, rel=1e-6)
+
+
+def test_md_lo_better_than_all():
+    """Paper: approximating HI (ALL config) is far more damaging than MD+LO."""
+    app = A.ALL_APPS["blackscholes"]
+    mult = C.get("mul16s_trunc0_8")
+    v_mdlo, _ = A.evaluate(app, None, mult=mult, parts=C.PART_MD_LO, n=128, seed=1234)
+    v_all, _ = A.evaluate(app, None, mult=mult, parts=C.PART_ALL, n=128, seed=1234)
+    assert v_all >= v_mdlo
+
+
+def test_ssim_properties():
+    img = A.smooth_image(64, 64, 0)
+    import jax.numpy as jnp
+
+    assert float(A.ssim(jnp.asarray(img), jnp.asarray(img))) == pytest.approx(1.0, abs=1e-6)
+    noisy = img + np.random.default_rng(0).normal(0, 25, img.shape)
+    v = float(A.ssim(jnp.asarray(img), jnp.asarray(noisy)))
+    assert 0.0 < v < 0.95
+
+
+def test_jmeint_reference_balance():
+    """Synthetic triangle pairs produce a non-degenerate hit/miss mix."""
+    app = A.ALL_APPS["jmeint"]
+    inputs = app.gen_inputs(256, 5)
+    ref = app.reference(inputs)
+    frac = ref.mean()
+    assert 0.1 < frac < 0.9

@@ -1,0 +1,148 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode; see DESIGN.md §4 for the TPU-target layout reasoning)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.core as C
+import repro.kernels as K
+
+
+def _ops(shape, lo, hi, seed, dtype):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# ax_matmul
+# ---------------------------------------------------------------------------
+
+SHAPES = [
+    (8, 8, 8),
+    (32, 64, 16),
+    (128, 128, 128),
+    (256, 64, 32),
+    (64, 256, 128),
+]
+BLOCKS = [(8, 8, 8), (32, 32, 32), (64, 64, 64), (128, 128, 128)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_ax_matmul_shapes(shape):
+    M, K_, N = shape
+    a = _ops((M, K_), -128, 128, 0, np.int8)
+    b = _ops((K_, N), -128, 128, 1, np.int8)
+    m = C.get("mul8s_bam_v2_h1")
+    swap = C.SwapConfig("A", 5, 1)
+    got = K.ax_matmul(a, b, m, swap, block_m=32, block_n=32, block_k=8)
+    ref = K.ax_matmul_ref(a, b, m, swap)
+    assert got.dtype == jnp.int32
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("blocks", BLOCKS)
+def test_ax_matmul_block_invariance(blocks):
+    """Output must be independent of the VMEM tiling."""
+    bm, bn, bk = blocks
+    a = _ops((128, 128), -128, 128, 2, np.int8)
+    b = _ops((128, 128), -128, 128, 3, np.int8)
+    m = C.get("mul8s_drum3_4")
+    got = K.ax_matmul(a, b, m, C.SwapConfig("B", 2, 0), block_m=bm, block_n=bn, block_k=bk)
+    ref = K.ax_matmul_ref(a, b, m, C.SwapConfig("B", 2, 0))
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize(
+    "mname", ["mul8s_exact", "mul8s_trunc0_4", "mul8s_mitch13_0", "mul8s_perf0_1"]
+)
+def test_ax_matmul_multiplier_families(mname):
+    a = _ops((64, 32), -128, 128, 4, np.int8)
+    b = _ops((32, 64), -128, 128, 5, np.int8)
+    m = C.get(mname)
+    for swap in (None, C.SwapConfig("A", 7, 0)):
+        got = K.ax_matmul(a, b, m, swap, block_m=32, block_n=32, block_k=16)
+        ref = K.ax_matmul_ref(a, b, m, swap)
+        assert np.array_equal(np.asarray(got), np.asarray(ref)), (mname, swap)
+
+
+def test_ax_matmul_unsigned_dtype():
+    a = _ops((32, 32), 0, 256, 6, np.uint8)
+    b = _ops((32, 32), 0, 256, 7, np.uint8)
+    m = C.get("mul8u_trunc0_4")
+    got = K.ax_matmul(a, b, m, C.SwapConfig("A", 3, 0), block_m=32, block_n=32, block_k=32)
+    ref = K.ax_matmul_ref(a, b, m, C.SwapConfig("A", 3, 0))
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_ax_matmul_exact_equals_mxu_matmul():
+    """With the exact multiplier the kernel reproduces the MXU int8 matmul."""
+    a = _ops((64, 64), -128, 128, 8, np.int8)
+    b = _ops((64, 64), -128, 128, 9, np.int8)
+    got = K.ax_matmul(a, b, C.get("mul8s_exact"), None, block_m=32, block_n=32, block_k=32)
+    assert np.array_equal(
+        np.asarray(got), np.asarray(a.astype(jnp.int32) @ b.astype(jnp.int32))
+    )
+
+
+def test_ax_matmul_dequant_epilogue():
+    a = _ops((32, 64), -128, 128, 10, np.int8)
+    b = _ops((64, 32), -128, 128, 11, np.int8)
+    sa = jnp.asarray(np.random.default_rng(12).uniform(0.001, 0.1, (32, 1)).astype(np.float32))
+    sb = jnp.asarray(np.random.default_rng(13).uniform(0.001, 0.1, (1, 32)).astype(np.float32))
+    m = C.get("mul8s_exact")
+    got = K.ax_matmul_dequant(a, b, sa, sb, m, None, block_m=32, block_n=32, block_k=32)
+    ref = (a.astype(jnp.float32) @ b.astype(jnp.float32)) * sa * sb
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([8, 16, 64]),
+    n=st.sampled_from([8, 32]),
+    bit=st.integers(0, 7),
+    value=st.integers(0, 1),
+)
+def test_ax_matmul_property(m, k, n, bit, value):
+    """Property: kernel == oracle for random shapes x swap configs."""
+    a = _ops((m, k), -128, 128, m * k + bit, np.int8)
+    b = _ops((k, n), -128, 128, k * n + value, np.int8)
+    mult = C.get("mul8s_trunc1_5")
+    swap = C.SwapConfig("B", bit, value)
+    got = K.ax_matmul(a, b, mult, swap, block_m=8, block_n=8, block_k=8)
+    ref = K.ax_matmul_ref(a, b, mult, swap)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# tuning_sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["mul8u_trunc0_4", "mul8s_drum3_4", "mul8u_mitch13_0"])
+@pytest.mark.parametrize("tile", [64, 128, 256])
+def test_tuning_sweep_matches_jnp_driver(name, tile):
+    m = C.get(name)
+    r_jnp = C.component_sweep(m, tile=tile)
+    r_pls = K.component_sweep_pallas(m, tile=tile)
+    assert r_jnp.noswap.sum_abs == r_pls.noswap.sum_abs
+    assert r_jnp.noswap.max_abs == r_pls.noswap.max_abs
+    assert r_jnp.oracle.sum_abs == r_pls.oracle.sum_abs
+    for cfg in C.all_configs(8):
+        s1, s2 = r_jnp.per_config[cfg], r_pls.per_config[cfg]
+        assert s1.sum_abs == s2.sum_abs, cfg
+        assert s1.max_abs == s2.max_abs, cfg
+        assert s1.count_neq == s2.count_neq, cfg
+        assert s1.sum_sq == pytest.approx(s2.sum_sq, rel=1e-6), cfg
+    assert r_jnp.best("mae") == r_pls.best("mae")
+
+
+def test_tuning_sweep_sampled_16bit():
+    """16-bit sweep with sampled operands stays consistent between drivers."""
+    m = C.get("mul16s_drum5_8")
+    r_jnp = C.component_sweep(m, tile=128, sample_bits=9, seed=11)
+    r_pls = K.component_sweep_pallas(m, tile=128, sample_bits=9, seed=11)
+    assert r_jnp.noswap.sum_abs == r_pls.noswap.sum_abs
+    assert r_jnp.best("mae") == r_pls.best("mae")
+    assert r_pls.reduction("mae") > 0.01  # a useful bit exists

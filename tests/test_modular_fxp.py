@@ -1,0 +1,143 @@
+"""Eq. 6 modular 32-bit multiply + Q16.16 fixed-point library tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.core as C
+
+I32 = st.integers(-(2**31), 2**31 - 1)
+
+
+def _ref_fxp_mul(a, b):
+    """int64 oracle: Q16.16 product = (a*b) >> 16, truncated to int32."""
+    p = (np.int64(a) * np.int64(b)) >> 16
+    return np.int32((int(p) + 2**31) % 2**32 - 2**31)
+
+
+@settings(max_examples=500, deadline=None)
+@given(a=I32, b=I32)
+def test_precise_modular_matches_int64(a, b):
+    got = int(np.asarray(C.ax_fxp_mul(jnp.int32(a), jnp.int32(b))))
+    assert got == int(_ref_fxp_mul(a, b))
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=I32, b=I32)
+def test_lsb_fix_with_exact_mult_is_bit_exact(a, b):
+    """Beyond-paper lsb_fix + exact 16-bit parts == int64 reference even when
+    every part goes through the 'approximate' (here exact) path."""
+    cfg = C.AxMul32Config(C.exact(16, True), parts=C.PART_ALL, lsb_fix=True)
+    got = int(np.asarray(C.ax_fxp_mul(jnp.int32(a), jnp.int32(b), cfg)))
+    assert got == int(_ref_fxp_mul(a, b))
+
+
+def test_paper_shift_protocol_loses_lsb_rows():
+    """Faithful paper protocol (no lsb_fix): exact 16-bit parts still differ
+    from the true product exactly by the dropped LSB rows."""
+    cfg = C.AxMul32Config(C.exact(16, True), parts=C.PART_ALL, lsb_fix=False)
+    rng = np.random.default_rng(0)
+    a = rng.integers(-(2**31), 2**31, 2000).astype(np.int32)
+    b = rng.integers(-(2**31), 2**31, 2000).astype(np.int32)
+    got = np.asarray(C.ax_fxp_mul(jnp.asarray(a), jnp.asarray(b), cfg)).astype(np.int64)
+    ref = np.array([_ref_fxp_mul(x, y) for x, y in zip(a, b)], np.int64)
+    # error exists but is bounded by the dropped rows: the MD fixes contribute
+    # up to |AH| + |BH| <= 2^16 raw each (~1 unit of Q16.16 integer part),
+    # the LO fix contributes <= ~2 after the >>16.
+    err = np.abs(got - ref)
+    assert err.max() <= (1 << 17) + 4
+    assert (err > 0).any()  # the protocol does drop information
+
+
+def test_md_lo_vs_all_error_ordering():
+    """Approximating HI injects much larger error than MD+LO (paper §III.B:
+    'approximating HI ... inserts an absolute error of at least 2^2n')."""
+    mult = C.get("mul16s_trunc0_8")
+    rng = np.random.default_rng(1)
+    a = rng.integers(-(2**24), 2**24, 4000).astype(np.int32)
+    b = rng.integers(-(2**24), 2**24, 4000).astype(np.int32)
+    ref = np.array([_ref_fxp_mul(x, y) for x, y in zip(a, b)], np.float64)
+    out = {}
+    for parts, nm in [(C.PART_MD_LO, "mdlo"), (C.PART_ALL, "all")]:
+        cfg = C.AxMul32Config(mult, parts=parts)
+        got = np.asarray(C.ax_fxp_mul(jnp.asarray(a), jnp.asarray(b), cfg)).astype(np.float64)
+        out[nm] = np.abs(got - ref).mean()
+    assert out["all"] > out["mdlo"]
+
+
+@pytest.mark.parametrize("mname,min_red", [("mul16s_drum5_8", 0.3), ("mul16s_bam_v4_h1", 0.15)])
+def test_swap_config_threads_through_modular(mname, min_red):
+    """A SWAPPER config on the 16-bit parts improves the modular product
+    error for non-commutative part multipliers (some circuits see ~0% like
+    several Table I rows; these two reproduce the large-gain regime)."""
+    mult = C.get(mname)
+    rng = np.random.default_rng(2)
+    a = rng.integers(-(2**26), 2**26, 8000).astype(np.int32)
+    b = rng.integers(-(2**26), 2**26, 8000).astype(np.int32)
+    ref = np.array([_ref_fxp_mul(x, y) for x, y in zip(a, b)], np.float64)
+
+    def mae_for(swap):
+        cfg = C.AxMul32Config(mult, parts=C.PART_MD_LO, swap=swap)
+        got = np.asarray(C.ax_fxp_mul(jnp.asarray(a), jnp.asarray(b), cfg)).astype(np.float64)
+        return np.abs(got - ref).mean()
+
+    base = mae_for(None)
+    best = min(mae_for(c) for c in C.all_configs(16))
+    assert (base - best) / base > min_red
+
+
+def test_dyn_modular_matches_static():
+    mult = C.get("mul16s_drum5_8")
+    cfg = C.AxMul32Config(mult, parts=C.PART_ALL, swap=C.SwapConfig("B", 11, 1))
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(-(2**30), 2**30, 512).astype(np.int32))
+    b = jnp.asarray(rng.integers(-(2**30), 2**30, 512).astype(np.int32))
+    ref = np.asarray(C.ax_fxp_mul(a, b, cfg))
+    got = np.asarray(C.ax_fxp_mul_dyn(a, b, cfg, *C.cfg_to_dyn(cfg.swap)))
+    assert np.array_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# Q16.16 math library accuracy (precise multiply installed)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def F():
+    return C.FxpMath(C.make_mul(None))
+
+
+def test_fxp_div(F):
+    rng = np.random.default_rng(4)
+    a = rng.uniform(-1000, 1000, 500).astype(np.float32)
+    b = rng.uniform(0.1, 100, 500).astype(np.float32) * np.sign(rng.normal(size=500)).astype(np.float32)
+    got = np.asarray(C.from_fxp(F.div(C.to_fxp(a), C.to_fxp(b))))
+    rel = np.abs(got - a / b) / np.maximum(np.abs(a / b), 1.0)
+    assert rel.max() < 5e-4
+
+
+def test_fxp_sqrt(F):
+    x = np.linspace(0.01, 3000, 700).astype(np.float32)
+    got = np.asarray(C.from_fxp(F.sqrt(C.to_fxp(x))))
+    assert np.abs(got - np.sqrt(x)).max() < 2e-3
+
+
+def test_fxp_exp_log(F):
+    x = np.linspace(-6, 9, 400).astype(np.float32)
+    got = np.asarray(C.from_fxp(F.exp(C.to_fxp(x))))
+    assert (np.abs(got - np.exp(x)) / np.maximum(np.exp(x), 1.0)).max() < 1e-3
+    y = np.linspace(0.05, 5000, 400).astype(np.float32)
+    got = np.asarray(C.from_fxp(F.log(C.to_fxp(y))))
+    assert np.abs(got - np.log(y)).max() < 1e-3
+
+
+def test_fxp_trig(F):
+    x = np.linspace(-7, 7, 500).astype(np.float32)
+    assert np.abs(np.asarray(C.from_fxp(F.sin(C.to_fxp(x)))) - np.sin(x)).max() < 5e-4
+    assert np.abs(np.asarray(C.from_fxp(F.cos(C.to_fxp(x)))) - np.cos(x)).max() < 5e-4
+    z = np.linspace(-0.999, 0.999, 301).astype(np.float32)
+    assert np.abs(np.asarray(C.from_fxp(F.acos(C.to_fxp(z)))) - np.arccos(z)).max() < 2e-3
+    y = np.linspace(-5, 5, 101).astype(np.float32)
+    xs = np.linspace(-5, 5, 101)[::-1].astype(np.float32).copy()
+    got = np.asarray(C.from_fxp(F.atan2(C.to_fxp(y), C.to_fxp(xs))))
+    assert np.abs(got - np.arctan2(y, xs)).max() < 2e-3

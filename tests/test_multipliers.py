@@ -1,0 +1,127 @@
+"""Bit-accuracy and property tests for the AxIC multiplier families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.core as C
+
+
+def _rand_ops(bits, signed, n=4096, seed=0):
+    rng = np.random.default_rng(seed)
+    lo, hi = (-(1 << (bits - 1)), 1 << (bits - 1)) if signed else (0, 1 << bits)
+    a = rng.integers(lo, hi, n).astype(np.int32)
+    b = rng.integers(lo, hi, n).astype(np.int32)
+    return a, b
+
+
+@pytest.mark.parametrize("bits", [8, 12, 16])
+@pytest.mark.parametrize("signed", [False, True])
+def test_exact_matches_numpy(bits, signed):
+    m = C.exact(bits, signed)
+    a, b = _rand_ops(bits, signed)
+    got = np.asarray(m.fn(jnp.asarray(a), jnp.asarray(b)))
+    if signed:
+        ref = (a.astype(np.int64) * b.astype(np.int64)).astype(np.int32)
+    else:
+        ref = (a.astype(np.uint64) * b.astype(np.uint64)).astype(np.uint32)
+    assert np.array_equal(got, ref)
+
+
+def test_registry_commutativity_flags():
+    """Every registry member with a declared flag matches empirical behavior."""
+    for name, m in C.REGISTRY.items():
+        if m.commutative is not None:
+            assert C.is_commutative(m) == m.commutative, name
+
+
+def test_registry_has_noncommutative_members():
+    nc = [n for n, m in C.REGISTRY.items() if m.commutative is False]
+    assert len(nc) >= 30  # SWAPPER targets exist at every width/signedness
+    for bits in (8, 12, 16):
+        for s in ("u", "s"):
+            assert any(f"mul{bits}{s}" in n for n in nc)
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["mul8u_trunc0_4", "mul8u_bam_v2_h1", "mul8u_drum3_4", "mul8u_mitch13_0",
+     "mul16s_trunc0_8", "mul16s_drum5_8"],
+)
+def test_approximation_is_bounded(name):
+    """Approximate product never exceeds the exact product's bit budget and
+    the average relative error is sane (<50%)."""
+    m = C.get(name)
+    a, b = _rand_ops(m.bits, m.signed, 8192)
+    p = np.asarray(m.fn(jnp.asarray(a), jnp.asarray(b))).astype(np.int64)
+    if not m.signed:
+        p = p & 0xFFFFFFFF
+    ex = a.astype(np.float64) * b.astype(np.float64)
+    rel = np.abs(p - ex) / np.maximum(np.abs(ex), 1)
+    assert rel.mean() < 0.5, rel.mean()
+
+
+def test_mitchell_error_bound():
+    """Mitchell's classical bound: relative error < 11.15% (underestimates)."""
+    m = C.mitchell(16, 0, 0, False)
+    a, b = _rand_ops(16, False, 1 << 16, seed=3)
+    a = np.maximum(a, 1)
+    b = np.maximum(b, 1)
+    p = np.asarray(m.fn(jnp.asarray(a), jnp.asarray(b))).astype(np.float64)
+    ex = a.astype(np.float64) * b.astype(np.float64)
+    rel = (ex - p) / ex
+    assert rel.max() < 0.1115 + 1e-3
+    assert rel.min() > -1e-3  # never overestimates (modulo fxp rounding)
+
+
+def test_trunc_error_closed_form():
+    """trunc(ka,kb): error == a_lo*bhi_trunc... exact algebraic identity:
+    a*b - (a&~ma)*(b&~mb) == a_lo*b + a_hi*b_lo where splits are exact."""
+    ka, kb = 2, 5
+    m = C.trunc(8, ka, kb, False)
+    a, b = _rand_ops(8, False, 2048, seed=1)
+    p = np.asarray(m.fn(jnp.asarray(a), jnp.asarray(b))).astype(np.int64)
+    ah = a & ~((1 << ka) - 1)
+    bh = b & ~((1 << kb) - 1)
+    assert np.array_equal(p, (ah.astype(np.int64) * bh.astype(np.int64)))
+
+
+def test_lut_roundtrip():
+    """A LUT built from a closed-form 8-bit multiplier reproduces it exactly
+    (signed and unsigned)."""
+    for name in ("mul8u_drum3_4", "mul8s_trunc0_4"):
+        m = C.get(name)
+        tbl = C.make_lut(m)
+        lm = C.lut_mult(m.name + "_lut", tbl, m.signed)
+        a, b = _rand_ops(8, m.signed, 4096, seed=2)
+        p1 = np.asarray(m.fn(jnp.asarray(a), jnp.asarray(b)))
+        p2 = np.asarray(lm.fn(jnp.asarray(a), jnp.asarray(b)))
+        assert np.array_equal(p1.astype(np.int64), p2.astype(np.int64))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    a=st.integers(0, 255),
+    b=st.integers(0, 255),
+    ka=st.integers(0, 7),
+    kb=st.integers(0, 7),
+)
+def test_trunc_underestimates_property(a, b, ka, kb):
+    """Property: operand truncation never overestimates the exact product."""
+    m = C.trunc(8, ka, kb, False)
+    p = int(np.asarray(m.fn(jnp.int32(a), jnp.int32(b))))
+    assert p <= a * b
+    assert p >= 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(-32768, 32767), b=st.integers(-32768, 32767))
+def test_signed_envelope_sign_property(a, b):
+    """Property: sign-magnitude envelope => sign(approx) in {0, sign(a*b)}."""
+    m = C.get("mul16s_drum5_8")
+    p = int(np.asarray(m.fn(jnp.int32(a), jnp.int32(b))))
+    ex = a * b
+    if p != 0 and ex != 0:
+        assert (p > 0) == (ex > 0)
