@@ -11,7 +11,7 @@ import argparse
 import sys
 import time
 
-from . import app_table, component_table, hw_table, roofline_table
+from . import adaptive_table, app_table, component_table, hw_table, roofline_table
 
 
 def main() -> None:
@@ -43,6 +43,14 @@ def main() -> None:
     best_gain = max(gains) if gains else 0.0
     csv.append(f"app_table,{1e6*(time.time()-t0)/max(len(app['rows']),1):.0f},"
                f"best_app_gain={100*best_gain:.1f}%")
+
+    t0 = time.time()
+    ad = adaptive_table.run(quick=args.quick)
+    print("\n" + adaptive_table.format_table(ad))
+    csv.append(f"adaptive_table,{1e6*(time.time()-t0)/max(len(ad['rows']),1):.0f},"
+               f"adaptive_gain_vs_static={100*ad['gain_vs_static']:.1f}%"
+               f" retunes={ad['retunes']}"
+               f" telemetry_us_per_step={ad['telemetry_us_per_step']:.0f}")
 
     t0 = time.time()
     hw = hw_table.run()

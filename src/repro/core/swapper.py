@@ -22,11 +22,18 @@ __all__ = [
     "swap_mask_dyn",
     "apply_swapper",
     "apply_swapper_dyn",
+    "NO_SWAP_TRIPLE",
+    "cfg_to_triple",
     "cfg_to_dyn",
     "swapped_mult",
     "oracle_mult",
     "all_configs",
 ]
+
+# (op_is_a, bit, value): value=2 never matches a bit => NoSwap.  This module
+# owns the triple encoding; everything else (runtime.policy, the grid kernel
+# callers) builds on cfg_to_triple / cfg_to_dyn.
+NO_SWAP_TRIPLE = (1, 0, 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +57,7 @@ def all_configs(bits: int):
     ]
 
 
-def swap_mask(a, b, cfg: SwapConfig, bits: int):
+def swap_mask(a, b, cfg: SwapConfig):
     """True where the operands must be swapped.  Operands may be signed; the
     bit is taken from the M-bit two's-complement representation."""
     src = a if cfg.operand == "A" else b
@@ -62,7 +69,7 @@ def apply_swapper(mult: AxMult, a, b, cfg: Optional[SwapConfig]):
     """Evaluate ``mult`` with the SWAPPER decision applied (branch-free)."""
     if cfg is None:
         return mult.fn(a, b)
-    m = swap_mask(a, b, cfg, mult.bits)
+    m = swap_mask(a, b, cfg)
     aa = jnp.where(m, b, a)
     bb = jnp.where(m, a, b)
     return mult.fn(aa, bb)
@@ -85,16 +92,18 @@ def apply_swapper_dyn(mult: AxMult, a, b, op_is_a, bit, value):
     return mult.fn(aa, bb)
 
 
-def cfg_to_dyn(cfg: Optional[SwapConfig]):
-    """SwapConfig -> (op_is_a, bit, value) int32 triple; None -> no-swap
-    encoding (value=2 never matches a bit)."""
+def cfg_to_triple(cfg: Optional[SwapConfig]):
+    """SwapConfig -> host-side (op_is_a, bit, value) int triple; None -> the
+    no-swap encoding."""
     if cfg is None:
-        return jnp.int32(1), jnp.int32(0), jnp.int32(2)
-    return (
-        jnp.int32(1 if cfg.operand == "A" else 0),
-        jnp.int32(cfg.bit),
-        jnp.int32(cfg.value),
-    )
+        return NO_SWAP_TRIPLE
+    return (1 if cfg.operand == "A" else 0, cfg.bit, cfg.value)
+
+
+def cfg_to_dyn(cfg: Optional[SwapConfig]):
+    """SwapConfig -> (op_is_a, bit, value) int32 scalar triple for the
+    dynamic (traced) execution paths."""
+    return tuple(jnp.int32(v) for v in cfg_to_triple(cfg))
 
 
 def swapped_mult(mult: AxMult, cfg: Optional[SwapConfig]) -> AxMult:

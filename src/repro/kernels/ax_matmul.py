@@ -34,9 +34,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.multipliers import AxMult
-from repro.core.swapper import SwapConfig
+from repro.core.swapper import SwapConfig, swap_mask_dyn
 
-__all__ = ["ax_matmul_pallas"]
+__all__ = ["ax_matmul_pallas", "ax_matmul_grid_pallas"]
+
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def _swap_select(a, b, swap: Optional[SwapConfig]):
@@ -50,8 +53,11 @@ def _swap_select(a, b, swap: Optional[SwapConfig]):
     return aa, bb
 
 
-def _ax_matmul_kernel(a_ref, b_ref, o_ref, *, mult: AxMult, swap, bk: int, k_steps: int):
-    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost."""
+def _accumulate_tile(a_ref, b_ref, o_ref, select, mult: AxMult, bk: int):
+    """Shared (bm, bn) output-tile accumulation (K innermost, output-block
+    revisiting): ``select(a_col, b_row)`` applies the SWAPPER front-end —
+    static config for ``_ax_matmul_kernel``, scalar-prefetched triple for the
+    grid kernel."""
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -64,12 +70,18 @@ def _ax_matmul_kernel(a_ref, b_ref, o_ref, *, mult: AxMult, swap, bk: int, k_ste
         # rank-1 slab: every scalar product of A[:, k] x B[k, :]
         a_col = jax.lax.dynamic_slice_in_dim(a_blk, k, 1, axis=1)   # (bm, 1)
         b_row = jax.lax.dynamic_slice_in_dim(b_blk, k, 1, axis=0)   # (1, bn)
-        aa, bb = _swap_select(a_col, b_row, swap)
+        aa, bb = select(a_col, b_row)
         prod = mult.fn(aa, bb).astype(jnp.int32)                    # (bm, bn)
         return acc + prod
 
     acc = jax.lax.fori_loop(0, bk, body, jnp.zeros(o_ref.shape, jnp.int32))
     o_ref[...] += acc
+
+
+def _ax_matmul_kernel(a_ref, b_ref, o_ref, *, mult: AxMult, swap, bk: int):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost."""
+    _accumulate_tile(a_ref, b_ref, o_ref,
+                     lambda a, b: _swap_select(a, b, swap), mult, bk)
 
 
 def ax_matmul_pallas(
@@ -91,9 +103,7 @@ def ax_matmul_pallas(
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (a.shape, b.shape, (bm, bn, bk))
     grid = (M // bm, N // bn, K // bk)
 
-    kernel = functools.partial(
-        _ax_matmul_kernel, mult=mult, swap=swap, bk=bk, k_steps=grid[2]
-    )
+    kernel = functools.partial(_ax_matmul_kernel, mult=mult, swap=swap, bk=bk)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -104,7 +114,71 @@ def ax_matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# granular (per-tile) swap-config grids — the adaptive-runtime kernel
+# ---------------------------------------------------------------------------
+
+def _ax_matmul_grid_kernel(cfg_ref, a_ref, b_ref, o_ref, *, mult: AxMult, bk: int):
+    """Like ``_ax_matmul_kernel`` but the swap decision comes from a
+    scalar-prefetched (grid_m, grid_n, 3) int32 triple grid indexed by the
+    output-tile coordinates: op_is_a / bit / value are runtime values, so the
+    policy (down to per-row-tile granularity) changes without recompiling."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    op_is_a = cfg_ref[i, j, 0]
+    bit = cfg_ref[i, j, 1]
+    value = cfg_ref[i, j, 2]
+
+    def select(a_col, b_row):
+        # core.swapper owns the triple semantics; pure jnp, fine in-kernel
+        sel = swap_mask_dyn(a_col, b_row, op_is_a, bit, value)      # (bm, bn)
+        return jnp.where(sel, b_row, a_col), jnp.where(sel, a_col, b_row)
+
+    _accumulate_tile(a_ref, b_ref, o_ref, select, mult, bk)
+
+
+def ax_matmul_grid_pallas(
+    a: jax.Array,                 # (M, K) int8
+    b: jax.Array,                 # (K, N) int8
+    mult: AxMult,
+    cfg_grid: jax.Array,          # (M/bm, N/bn, 3) int32 (op_is_a, bit, value)
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked approximate matmul with a per-output-tile swap-config grid
+    (scalar prefetch: the grid is resident in SMEM before the body runs)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (a.shape, b.shape, (bm, bn, bk))
+    grid = (M // bm, N // bn, K // bk)
+    assert cfg_grid.shape == (grid[0], grid[1], 3), (cfg_grid.shape, grid)
+
+    kernel = functools.partial(_ax_matmul_grid_kernel, mult=mult, bk=bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, cfg: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k, cfg: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, cfg: (i, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(cfg_grid.astype(jnp.int32), a, b)

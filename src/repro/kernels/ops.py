@@ -16,10 +16,10 @@ from repro.core.tuning import (
     result_from_accs,
 )
 
-from .ax_matmul import ax_matmul_pallas
+from .ax_matmul import ax_matmul_grid_pallas, ax_matmul_pallas
 from .tuning_sweep import tuning_sweep_pallas
 
-__all__ = ["ax_matmul", "ax_matmul_dequant", "component_sweep_pallas"]
+__all__ = ["ax_matmul", "ax_matmul_dequant", "ax_matmul_grid", "component_sweep_pallas"]
 
 
 @functools.partial(
@@ -66,6 +66,29 @@ def ax_matmul_dequant(
         block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
     )
     return (acc.astype(jnp.float32) * scale_a * scale_b).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mult", "block_m", "block_n", "block_k", "interpret")
+)
+def ax_matmul_grid(
+    a: jax.Array,                 # (M, K) int8
+    b: jax.Array,                 # (K, N) int8
+    mult: AxMult,
+    cfg_grid: jax.Array,          # (M/bm, N/bn, 3) int32 swap triples
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Approximate matmul with a per-output-tile SWAPPER config grid.  The
+    grid is a *traced* operand (scalar prefetch), so the adaptive runtime
+    re-tunes tile configs without triggering a recompile."""
+    return ax_matmul_grid_pallas(
+        a, b, mult, cfg_grid,
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )
 
 
 def component_sweep_pallas(

@@ -6,10 +6,10 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.core.multipliers import AxMult
-from repro.core.swapper import SwapConfig, apply_swapper
+from repro.core.swapper import SwapConfig, apply_swapper, apply_swapper_dyn
 from repro.core.tuning import tile_stats_jnp
 
-__all__ = ["ax_matmul_ref", "tuning_sweep_ref"]
+__all__ = ["ax_matmul_ref", "ax_matmul_grid_ref", "tuning_sweep_ref"]
 
 
 def ax_matmul_ref(a, b, mult: AxMult, swap: Optional[SwapConfig] = None):
@@ -19,6 +19,26 @@ def ax_matmul_ref(a, b, mult: AxMult, swap: Optional[SwapConfig] = None):
     B = b.astype(jnp.int32)[None, :, :]   # (1, K, N)
     prod = apply_swapper(mult, A, B, swap).astype(jnp.int32)
     return jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def ax_matmul_grid_ref(a, b, mult: AxMult, cfg_grid):
+    """Per-output-tile dynamic-config reference: tile (ti, tj) of the output
+    uses the (op_is_a, bit, value) triple at ``cfg_grid[ti, tj]``."""
+    M, N = a.shape[0], b.shape[1]
+    gm, gn = cfg_grid.shape[0], cfg_grid.shape[1]
+    assert M % gm == 0 and N % gn == 0, (a.shape, b.shape, cfg_grid.shape)
+    tm, tn = M // gm, N // gn
+    rows = []
+    for ti in range(gm):
+        blocks = []
+        A = a[ti * tm:(ti + 1) * tm].astype(jnp.int32)[:, :, None]
+        for tj in range(gn):
+            B = b[:, tj * tn:(tj + 1) * tn].astype(jnp.int32)[None, :, :]
+            t = cfg_grid[ti, tj]
+            prod = apply_swapper_dyn(mult, A, B, t[0], t[1], t[2]).astype(jnp.int32)
+            blocks.append(jnp.sum(prod, axis=1, dtype=jnp.int32))
+        rows.append(jnp.concatenate(blocks, axis=1))
+    return jnp.concatenate(rows, axis=0)
 
 
 def tuning_sweep_ref(mult: AxMult, a_vals, b_vals):

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .ax_matmul import _CompilerParams
+
 from repro.core.metrics import abs_err
 from repro.core.multipliers import AxMult
 
@@ -114,7 +116,7 @@ def tuning_sweep_pallas(mult: AxMult, vals: jax.Array, tile: int = 128,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel", "arbitrary")),
     )(vals, vals)
 
     it = iter(outs)

@@ -1,7 +1,14 @@
 """Serving driver: batched prefill + decode with the sharded KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
-        --batch 4 --prompt-len 64 --new-tokens 32 [--ax]
+        --batch 4 --prompt-len 64 --new-tokens 32 [--ax] [--adaptive]
+
+``--adaptive`` attaches the online adaptive SWAPPER runtime: the decode step
+streams operand/error telemetry, a drift detector scores the live operand
+distribution against the one the policy was tuned on, and on drift the
+controller re-tunes the swap config in place — zero recompilations.  In
+``--smoke`` mode a synthetic distribution drift is injected mid-generation
+(``--drift-at``) to exercise the loop end-to-end.
 """
 from __future__ import annotations
 
@@ -19,6 +26,33 @@ from repro.models import init_params
 from repro.serve import ServeConfig, generate
 
 
+def _drift_hook(at_step: int, scale: float):
+    """Returns a param_hook that, at ``at_step``, rescales every other row of
+    the weights' *input* (second-to-last) axis.  Weight quantization groups
+    reduce over exactly that axis, so an alternating pattern *within* each
+    group shifts the int8 code (bit-occupancy) distribution of the quantized
+    weights directly — uniform whole-column scaling would be quantization
+    invariant.  A controlled stand-in for live traffic drift (it also
+    perturbs downstream activations)."""
+    done = {"fired": False}
+
+    def hook(step, params):
+        if step != at_step or done["fired"]:
+            return params
+        done["fired"] = True
+
+        def perturb(w):
+            if w.ndim < 2:
+                return w
+            mask = (jnp.arange(w.shape[-2]) % 2 == 0)[:, None]
+            return jnp.where(mask, w * scale, w)
+
+        print(f"[drift] step {step}: injected synthetic weight drift (x{scale})")
+        return jax.tree.map(perturb, params)
+
+    return hook
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-72b", choices=sorted(ARCHS))
@@ -28,13 +62,40 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ax", action="store_true")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online SWAPPER runtime (telemetry + drift-triggered re-tune)")
+    ap.add_argument("--drift-at", type=int, default=None,
+                    help="decode step at which to inject synthetic drift "
+                         "(default: new_tokens//3 with --adaptive --smoke; -1 disables)")
+    ap.add_argument("--drift-scale", type=float, default=0.05)
+    ap.add_argument("--policy-out", default=None,
+                    help="write the final (possibly re-tuned) SwapPolicy JSON here")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
     if args.smoke:
         cfg = reduced(cfg)
-    if args.ax:
+    if args.ax or args.adaptive:
         cfg = dataclasses.replace(cfg, ax=AxPolicy(backend="mxu"))
+
+    controller = None
+    param_hook = None
+    if args.adaptive:
+        from repro.runtime import AdaptiveConfig, AdaptiveController, SwapPolicy
+
+        policy = SwapPolicy.from_ax_policy(cfg.ax)
+        controller = AdaptiveController(
+            policy, targets=cfg.ax.targets,
+            cfg=AdaptiveConfig(min_observe_steps=2, cooldown_steps=4),
+            log_fn=lambda line: print(f"[adaptive] {line}"),
+        )
+        controller.warmup()
+        drift_at = args.drift_at
+        if drift_at is None:
+            drift_at = args.new_tokens // 3 if args.smoke else -1
+        if drift_at >= 0:
+            param_hook = _drift_hook(drift_at, args.drift_scale)
+        print(f"[adaptive] {policy.describe()}")
 
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
@@ -52,12 +113,21 @@ def main():
     t0 = time.time()
     out = generate(params, prompt, cfg,
                    ServeConfig(max_new_tokens=args.new_tokens,
-                               temperature=args.temperature))
+                               temperature=args.temperature),
+                   adaptive=controller, param_hook=param_hook)
     dt = time.time() - t0
     toks = out.size
     print(f"arch={cfg.name} generated {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s incl. compile)")
     print(np.asarray(out)[:, :16])
+
+    if controller is not None:
+        print(f"[adaptive] {controller.telemetry.describe()}")
+        print(f"[adaptive] re-tunes: {len(controller.retunes)} "
+              f"final {controller.policy.describe()}")
+        if args.policy_out:
+            controller.policy.save(args.policy_out)
+            print(f"[adaptive] policy written to {args.policy_out}")
 
 
 if __name__ == "__main__":

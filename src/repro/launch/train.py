@@ -42,6 +42,8 @@ def main():
     ap.add_argument("--remat", default="none")
     ap.add_argument("--compress", default="none", choices=["none", "bf16"])
     ap.add_argument("--ax", action="store_true", help="SWAPPER approximate matmuls")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online adaptive SWAPPER (telemetry + drift re-tune)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -50,19 +52,45 @@ def main():
     cfg = ARCHS[args.arch]
     if args.smoke:
         cfg = reduced(cfg)
-    if args.ax:
+    if args.ax or args.adaptive:
         cfg = dataclasses.replace(cfg, ax=AxPolicy(backend="mxu"))
     par = ParallelConfig(remat=args.remat, grad_accum=args.grad_accum, fsdp=False,
                          seq_shard=False)
+    if args.adaptive:
+        print(f"[adaptive] forcing scan_layers=False, remat=none (was "
+              f"{args.remat}), grad_accum=1 (was {args.grad_accum}): telemetry "
+              f"records must be outer-trace outputs (see train_step)")
+        par = dataclasses.replace(par, scan_layers=False, remat="none", grad_accum=1)
     opt = AdamWConfig(lr=args.lr, compress=args.compress)
 
     stream = SyntheticStream(
         DataConfig(cfg.vocab, args.seq, args.batch, seed=0, mode="arith")
     )
-    step = jax.jit(make_train_step(cfg, par, opt), donate_argnums=(0,))
+    step = jax.jit(make_train_step(cfg, par, opt, adaptive=args.adaptive),
+                   donate_argnums=(0,))
 
-    def step_fn(state, batch):
-        return step(state, jax.tree.map(jnp.asarray, batch))
+    if args.adaptive:
+        from repro.runtime import AdaptiveController, SwapPolicy
+
+        controller = AdaptiveController(
+            SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
+            log_fn=lambda line: print(f"[adaptive] {line}"),
+        )
+        controller.warmup()
+
+        pending = [None]   # one-step-stale observe keeps dispatch pipelined
+
+        def step_fn(state, batch):
+            state, metrics = step(state, jax.tree.map(jnp.asarray, batch),
+                                  controller.dyn_tree())
+            telem = metrics.pop("ax_telemetry")
+            if pending[0] is not None:
+                controller.observe(jax.device_get(pending[0]))
+            pending[0] = telem
+            return state, metrics
+    else:
+        def step_fn(state, batch):
+            return step(state, jax.tree.map(jnp.asarray, batch))
 
     def make_state():
         params = init_params(jax.random.PRNGKey(0), cfg)
@@ -83,6 +111,11 @@ def main():
         FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
         on_step=on_step,
     )
+    if args.adaptive and pending[0] is not None:
+        controller.observe(jax.device_get(pending[0]))   # flush final step
+        print(f"[adaptive] {controller.telemetry.describe()}")
+        print(f"[adaptive] re-tunes: {len(controller.retunes)} "
+              f"final {controller.policy.describe()}")
     print(f"done: {log}")
 
 

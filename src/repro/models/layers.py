@@ -106,12 +106,20 @@ def axes_for_path(path: str, ndim: int):
 
 def dense(x, p, ax: Optional[AxPolicy] = None, target: str = ""):
     """y = x @ w (+ b).  Routes through the SWAPPER approximate path when the
-    policy covers this projection target (DESIGN.md §5)."""
+    policy covers this projection target (DESIGN.md §5).  Under an open
+    adaptive-runtime scope the swap config enters as a traced triple instead
+    of a baked constant, so the controller can re-tune without recompiles."""
     w = p["w"]
     if ax is not None and target in ax.targets:
-        from repro.quant.ax import ax_dense
+        from repro.quant.ax import ax_dense, ax_dense_dyn
+        from repro.runtime.scope import active_scope
 
-        y = ax_dense(x, w.astype(x.dtype), ax)
+        scope = active_scope()
+        dyn = scope.triple_for(target) if scope is not None else None
+        if dyn is not None:
+            y = ax_dense_dyn(x, w.astype(x.dtype), ax, dyn, scope=scope, target=target)
+        else:
+            y = ax_dense(x, w.astype(x.dtype), ax)
     else:
         y = x @ w.astype(x.dtype)
     if "b" in p:

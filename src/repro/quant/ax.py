@@ -32,12 +32,20 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AxPolicy
 from repro.core import multipliers as M
-from repro.core.swapper import SwapConfig
+from repro.core.swapper import SwapConfig, apply_swapper_dyn
 
-__all__ = ["ax_dense", "quantize_rows", "separable_transforms", "ax_matmul_int"]
+__all__ = [
+    "ax_dense",
+    "ax_dense_dyn",
+    "quantize_rows",
+    "separable_transforms",
+    "ax_matmul_int",
+    "ax_matmul_int_dyn",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -100,6 +108,29 @@ def _int_mm(a, b):
     )
 
 
+def _pad_for_kernel(a_i8, b_i8):
+    """Flatten leading dims and zero-pad both operands to block multiples for
+    the Pallas kernels.  Returns (a2d, b, lead_shape, m0, n0, (bm, bn, bk));
+    callers crop ``out[:m0, :n0]`` and reshape to ``(*lead, n0)``."""
+    lead = a_i8.shape[:-1]
+    a2d = a_i8.reshape(-1, a_i8.shape[-1])
+    m0, k0 = a2d.shape
+    n0 = b_i8.shape[-1]
+    bm, bn, bk = min(128, m0), min(128, n0), min(128, k0)
+
+    def _pad(v, mult_, axis):
+        pad = (-v.shape[axis]) % mult_
+        if pad == 0:
+            return v
+        widths = [(0, 0)] * v.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(v, widths)
+
+    a2d = _pad(_pad(a2d, bm, 0), bk, 1)
+    bp = _pad(_pad(b_i8, bk, 0), bn, 1)
+    return a2d, bp, lead, m0, n0, (bm, bn, bk)
+
+
 def ax_matmul_int(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
     """Approximate int matmul (..., K) @ (K, N) -> (..., N) int32."""
     mult = M.get(policy.mult_name)
@@ -124,24 +155,7 @@ def ax_matmul_int(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
     if policy.backend == "kernel":
         from repro.kernels import ax_matmul as kernel_mm
 
-        lead = a_i8.shape[:-1]
-        a2d = a_i8.reshape(-1, a_i8.shape[-1])
-        m0, k0 = a2d.shape
-        n0 = b_i8.shape[-1]
-
-        def _pad(v, mult_, axis):
-            pad = (-v.shape[axis]) % mult_
-            if pad == 0:
-                return v
-            widths = [(0, 0)] * v.ndim
-            widths[axis] = (0, pad)
-            return jnp.pad(v, widths)
-
-        bm = min(128, m0)
-        bn = min(128, n0)
-        bk = min(128, k0)
-        a2d = _pad(_pad(a2d, bm, 0), bk, 1)
-        bp = _pad(_pad(b_i8, bk, 0), bn, 1)
+        a2d, bp, lead, m0, n0, (bm, bn, bk) = _pad_for_kernel(a_i8, b_i8)
         out = kernel_mm(a2d, bp, mult, swap, block_m=bm, block_n=bn, block_k=bk)
         return out[:m0, :n0].reshape(*lead, n0)
     # 'emul'
@@ -150,6 +164,57 @@ def ax_matmul_int(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
     lead = a_i8.shape[:-1]
     a2d = a_i8.reshape(-1, a_i8.shape[-1])
     return ax_matmul_ref(a2d, b_i8, mult, swap).reshape(*lead, b_i8.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# dynamic-config variants (the adaptive-runtime zero-recompile path)
+# ---------------------------------------------------------------------------
+
+def ax_matmul_int_dyn(a_i8, b_i8, policy: AxPolicy, dyn) -> jax.Array:
+    """``ax_matmul_int`` with the swap decision as a traced (op_is_a, bit,
+    value) int32 triple, so the adaptive controller can re-tune a serving
+    step without recompiling it (value=2 encodes NoSwap).
+
+    The mxu backend keeps the 2-int8-matmul closed form of the static path:
+    with row mask sa (decision on A) and column mask sb (decision on B), each
+    gated by op_is_a, the operand-side selects
+
+        X1 = op_is_a ? sa.g(A) : g(A)      Y1 = op_is_a ? f(B) : sb.f(B)
+        X2 = op_is_a ? (1-sa).f(A) : f(A)  Y2 = op_is_a ? g(B) : (1-sb).g(B)
+
+    make ``X1 @ Y1 + X2 @ Y2`` equal the A-form or B-form factorization of
+    the static path for every triple — bit-identical, still MXU-rate.
+    """
+    mult = M.get(policy.mult_name)
+    op_is_a, bit, value = dyn[0], dyn[1], dyn[2]
+    if policy.backend == "mxu":
+        sep = separable_transforms(policy.mult_name)
+        assert sep is not None, f"{policy.mult_name} is not separable; use backend='kernel'"
+        f, g = sep
+        ai = a_i8.astype(jnp.int32)
+        bi = b_i8.astype(jnp.int32)
+        is_a = op_is_a == 1
+        sa = ((((ai >> bit) & 1) == value) & is_a).astype(jnp.int32)
+        sb = ((((bi >> bit) & 1) == value) & ~is_a).astype(jnp.int32)
+        x1 = jnp.where(is_a, sa * g(ai), g(ai)).astype(jnp.int8)
+        y1 = jnp.where(is_a, f(bi), sb * f(bi)).astype(jnp.int8)
+        x2 = jnp.where(is_a, (1 - sa) * f(ai), f(ai)).astype(jnp.int8)
+        y2 = jnp.where(is_a, g(bi), (1 - sb) * g(bi)).astype(jnp.int8)
+        return _int_mm(x1, y1) + _int_mm(x2, y2)
+    if policy.backend == "kernel":
+        from repro.kernels import ax_matmul_grid
+
+        a2d, bp, lead, m0, n0, (bm, bn, bk) = _pad_for_kernel(a_i8, b_i8)
+        gm, gn = a2d.shape[0] // bm, bp.shape[1] // bn
+        grid = jnp.broadcast_to(jnp.asarray(dyn, jnp.int32), (gm, gn, 3))
+        out = ax_matmul_grid(a2d, bp, mult, grid, block_m=bm, block_n=bn, block_k=bk)
+        return out[:m0, :n0].reshape(*lead, n0)
+    # 'emul'
+    lead = a_i8.shape[:-1]
+    A = a_i8.reshape(-1, a_i8.shape[-1]).astype(jnp.int32)[:, :, None]
+    B = b_i8.astype(jnp.int32)[None, :, :]
+    prod = apply_swapper_dyn(mult, A, B, op_is_a, bit, value).astype(jnp.int32)
+    return jnp.sum(prod, axis=1, dtype=jnp.int32).reshape(*lead, b_i8.shape[-1])
 
 
 # ---------------------------------------------------------------------------
@@ -184,3 +249,44 @@ def _ax_dense_bwd(policy, res, gy):
 
 
 ax_dense.defvjp(_ax_dense_fwd, _ax_dense_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _ax_dense_dyn_core(x, w, policy: AxPolicy, dyn):
+    return _ax_dense_dyn_impl(x, w, policy, dyn)
+
+
+def _ax_dense_dyn_impl(x, w, policy, dyn):
+    xq, sx = quantize_rows(x.astype(jnp.float32), axis=-1)
+    wq, sw = quantize_rows(w.astype(jnp.float32), axis=0)
+    acc = ax_matmul_int_dyn(xq, wq, policy, dyn)
+    return (acc.astype(jnp.float32) * sx * sw).astype(x.dtype)
+
+
+def _ax_dense_dyn_fwd(x, w, policy, dyn):
+    return _ax_dense_dyn_impl(x, w, policy, dyn), (x, w)
+
+
+def _ax_dense_dyn_bwd(policy, res, gy):
+    x, w = res
+    gx, gw = _ax_dense_bwd(policy, res, gy)
+    # integer config triple: symbolic-zero (float0) cotangent
+    return gx, gw, np.zeros((3,), dtype=jax.dtypes.float0)
+
+
+_ax_dense_dyn_core.defvjp(_ax_dense_dyn_fwd, _ax_dense_dyn_bwd)
+
+
+def ax_dense_dyn(x, w, policy: AxPolicy, dyn, scope=None, target: str = ""):
+    """``ax_dense`` with a traced swap triple (adaptive runtime path); when a
+    collecting scope is open, also emits the telemetry record for this call.
+    The summary is computed outside the custom_vjp boundary (its tracers must
+    belong to the outer trace to be returned from the jitted step); XLA CSE
+    merges the duplicated quantization."""
+    if scope is not None and scope.collect:
+        from repro.runtime.telemetry import operand_summary
+
+        xq, _ = quantize_rows(x.astype(jnp.float32), axis=-1)
+        wq, _ = quantize_rows(w.astype(jnp.float32), axis=0)
+        scope.record(target, operand_summary(xq, wq, M.get(policy.mult_name), dyn))
+    return _ax_dense_dyn_core(x, w, policy, dyn)

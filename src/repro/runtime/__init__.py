@@ -1,0 +1,50 @@
+"""Online adaptive SWAPPER runtime (DESIGN: telemetry -> drift -> re-tune).
+
+Closes the loop between tuning and execution for the paper's *online* error
+reduction claim:
+
+  scope      — trace-time dynamic-policy context: swap configs enter compiled
+               steps as traced int32 triples; telemetry summaries leave as
+               ordinary outputs (zero recompiles on policy change)
+  telemetry  — streaming, exponentially-decayed operand/error statistics on
+               the limb-exact accumulators of ``core/metrics.py``
+  policy     — granular, serializable SwapPolicy maps (global / per-tensor /
+               per-layer / per-row-tile grids for the scalar-prefetch kernel)
+  drift      — bit-occupancy distribution-shift scoring vs the tuned-on
+               reference snapshot
+  controller — drift-triggered incremental re-tune: one vmapped jitted call
+               scores NoSwap + all 4M configs over buffered live operands
+"""
+from .controller import AdaptiveConfig, AdaptiveController, RetuneEvent, all_triples
+from .drift import DriftConfig, DriftDetector, drift_score
+from .policy import NO_SWAP_TRIPLE, SwapPolicy, triple_of
+from .scope import AxRuntimeScope, active_scope, ax_scope, fallback_chain
+from .telemetry import (
+    RETUNE_SAMPLE,
+    TELEMETRY_SAMPLE,
+    TargetTelemetry,
+    Telemetry,
+    operand_summary,
+)
+
+__all__ = [
+    "AdaptiveConfig",
+    "AdaptiveController",
+    "RetuneEvent",
+    "all_triples",
+    "DriftConfig",
+    "DriftDetector",
+    "drift_score",
+    "NO_SWAP_TRIPLE",
+    "SwapPolicy",
+    "triple_of",
+    "AxRuntimeScope",
+    "active_scope",
+    "ax_scope",
+    "fallback_chain",
+    "Telemetry",
+    "TargetTelemetry",
+    "operand_summary",
+    "TELEMETRY_SAMPLE",
+    "RETUNE_SAMPLE",
+]

@@ -1,0 +1,230 @@
+"""The adaptive SWAPPER controller: closes the loop between telemetry and
+policy.
+
+Per observed step it (1) folds the step's telemetry records into the
+streaming accumulators, (2) refreshes per-target operand ring buffers from
+the exported samples, (3) scores distribution drift against the snapshot the
+current policy was tuned on, and (4) on drift, re-tunes the affected targets
+by scoring **all 4M+1 configurations in one vmapped call** of a jitted
+scorer built on ``apply_swapper_dyn`` (the one-compile dynamic sweep of
+``core/tuning.py``) over the buffered live operands.  The scorer and the
+serving step both take the config as traced int32 inputs, so adaptation
+costs **zero recompilations** after warm-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multipliers as M
+from repro.core.metrics import abs_err
+from repro.core.swapper import SwapConfig, all_configs, apply_swapper_dyn
+
+from .drift import DriftConfig, DriftDetector
+from .policy import NO_SWAP_TRIPLE, SwapPolicy, triple_of
+from .telemetry import Telemetry, operand_summary
+
+__all__ = ["AdaptiveConfig", "RetuneEvent", "AdaptiveController", "all_triples"]
+
+
+def all_triples(bits: int) -> np.ndarray:
+    """(4M+1, 3) int32 sweep space: NoSwap first, then every single-bit
+    config in ``all_configs`` order."""
+    rows = [NO_SWAP_TRIPLE] + [triple_of(c) for c in all_configs(bits)]
+    return np.asarray(rows, np.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _score_configs(mult, a, b, triples, metric: str = "mae"):
+    """Mean error of every (op_is_a, bit, value) triple over the operand
+    sample — one compile serves every re-tune."""
+    exact = mult.exact_product(a, b)
+
+    def one(t):
+        p = apply_swapper_dyn(mult, a, b, t[0], t[1], t[2])
+        e = abs_err(p, exact, mult.signed).astype(jnp.float32)
+        if metric == "mse":
+            e = e * e
+        elif metric == "ep":
+            e = (e != 0).astype(jnp.float32)
+        return jnp.mean(e)
+
+    return jax.vmap(one)(triples)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _summarize_pair(mult, a, b, dyn):
+    """Telemetry record for a raw operand pair stream (benchmarks/tests feed
+    the controller without a serving engine)."""
+    return operand_summary(a, b, mult, dyn)
+
+
+@dataclasses.dataclass
+class AdaptiveConfig:
+    decay: float = 0.2             # telemetry EW decay per observed step
+    drift_threshold: float = 0.04  # mean bit-probability shift triggering re-tune
+    min_observe_steps: int = 4     # warm-up before drift can fire
+    cooldown_steps: int = 4        # steps between re-tunes (buffer refresh time)
+    buffer_size: int = 2048        # per-target operand ring-buffer elements
+    metric: str = "mae"            # re-tune objective
+
+
+@dataclasses.dataclass
+class RetuneEvent:
+    step: int
+    target: str
+    drift: float
+    old: Optional[SwapConfig]
+    new: Optional[SwapConfig]
+    old_score: float
+    new_score: float
+
+    def describe(self) -> str:
+        fmt = lambda c: "noswap" if c is None else c.short()
+        return (f"retune[{self.target}] step={self.step} drift={self.drift:.3f} "
+                f"{fmt(self.old)} ({self.old_score:.2f}) -> "
+                f"{fmt(self.new)} ({self.new_score:.2f})")
+
+
+class _RingBuffer:
+    """Host-side operand ring buffer (recency-biased re-tune sample)."""
+
+    def __init__(self, size: int):
+        self.a = np.zeros(size, np.int32)
+        self.b = np.zeros(size, np.int32)
+        self.pos = 0
+        self.filled = 0
+
+    def add(self, a: np.ndarray, b: np.ndarray) -> None:
+        a = np.asarray(a, np.int32).reshape(-1)
+        b = np.asarray(b, np.int32).reshape(-1)
+        n = min(len(a), len(b), len(self.a))
+        idx = (self.pos + np.arange(n)) % len(self.a)
+        self.a[idx] = a[:n]
+        self.b[idx] = b[:n]
+        self.pos = int((self.pos + n) % len(self.a))
+        self.filled = min(self.filled + n, len(self.a))
+
+    def operands(self):
+        """Fixed-shape views (partially-filled slots repeat the newest data
+        so the jitted scorer sees one static shape)."""
+        if self.filled >= len(self.a):
+            return self.a, self.b
+        n = max(self.filled, 1)
+        reps = -(-len(self.a) // n)
+        return (np.tile(self.a[:n], reps)[: len(self.a)],
+                np.tile(self.b[:n], reps)[: len(self.a)])
+
+
+class AdaptiveController:
+    """Owns the telemetry, drift detector, operand buffers and the policy."""
+
+    def __init__(
+        self,
+        policy: SwapPolicy,
+        targets: Sequence[str],
+        cfg: Optional[AdaptiveConfig] = None,
+        log_fn: Optional[Callable[[str], None]] = None,
+    ):
+        self.policy = policy
+        self.targets = tuple(targets)
+        self.cfg = cfg or AdaptiveConfig()
+        self.mult = M.get(policy.mult_name)
+        self.telemetry = Telemetry(self.mult.bits, self.cfg.decay)
+        self.detector = DriftDetector(DriftConfig(
+            threshold=self.cfg.drift_threshold,
+            min_steps=self.cfg.min_observe_steps,
+        ))
+        self.buffers: Dict[str, _RingBuffer] = {
+            t: _RingBuffer(self.cfg.buffer_size) for t in self.targets
+        }
+        self.triples = jnp.asarray(all_triples(self.mult.bits))
+        self.step = 0
+        self._dyn_cache = None            # (policy.version, built tree)
+        self._last_retune_step = -(10 ** 9)
+        self.retunes: List[RetuneEvent] = []
+        self.log: List[str] = []
+        self._log_fn = log_fn
+
+    # -- plumbing ------------------------------------------------------
+    def _emit(self, line: str) -> None:
+        self.log.append(line)
+        if self._log_fn is not None:
+            self._log_fn(line)
+
+    def dyn_tree(self) -> Dict[str, jnp.ndarray]:
+        """Traced-input triples for the serving/training step (stable pytree
+        structure: policy updates change values only, never keys).  Cached on
+        the policy version so the per-step hot path pays no rebuild between
+        re-tunes."""
+        if self._dyn_cache is None or self._dyn_cache[0] != self.policy.version:
+            self._dyn_cache = (self.policy.version,
+                               self.policy.dyn_tree(self.targets))
+        return self._dyn_cache[1]
+
+    def warmup(self) -> None:
+        """Pre-compile the re-tune scorer so later re-tunes cost zero
+        compilations (verified in tests via the jit cache size)."""
+        zeros = jnp.zeros(self.cfg.buffer_size, jnp.int32)
+        _score_configs(self.mult, zeros, zeros, self.triples,
+                       self.cfg.metric).block_until_ready()
+
+    def scorer_cache_size(self) -> int:
+        return _score_configs._cache_size()
+
+    # -- observation ---------------------------------------------------
+    def observe(self, records: Dict[str, Dict[str, np.ndarray]]) -> List[str]:
+        """Fold one step's scope-collected telemetry in; re-tune on drift.
+        Returns the log lines emitted for this step."""
+        mark = len(self.log)
+        self.telemetry.update(records)
+        for target, rec in records.items():
+            buf = self.buffers.get(target)
+            if buf is not None:
+                buf.add(rec["a_smp"], rec["b_smp"])
+        self.step += 1
+
+        if self.step - self._last_retune_step > self.cfg.cooldown_steps:
+            drifted = self.detector.check(self.telemetry.snapshot())
+            for target, score in drifted:
+                if target in self.buffers:
+                    self.retune(target, drift=score)
+        return self.log[mark:]
+
+    def observe_operands(self, target: str, a, b) -> List[str]:
+        """Feed a raw int operand pair batch (no engine required); used by
+        benchmarks and synthetic drift streams."""
+        dyn = jnp.asarray(triple_of(self.policy.lookup(target)), jnp.int32)
+        rec = jax.device_get(_summarize_pair(self.mult, jnp.asarray(a),
+                                             jnp.asarray(b), dyn))
+        stacked = {k: np.asarray(v)[None] for k, v in rec.items()}
+        return self.observe({target: stacked})
+
+    # -- re-tuning -----------------------------------------------------
+    def retune(self, target: str, drift: float = 0.0) -> RetuneEvent:
+        """Incremental re-tune of one target over its live operand buffer:
+        one vmapped call scores NoSwap + all 4M configs; zero recompiles."""
+        a, b = self.buffers[target].operands()
+        scores = np.asarray(_score_configs(
+            self.mult, jnp.asarray(a), jnp.asarray(b), self.triples,
+            self.cfg.metric))
+        best = int(np.argmin(scores))
+        old = self.policy.lookup(target)
+        old_idx = int(np.nonzero(
+            (np.asarray(self.triples) == np.asarray(triple_of(old))).all(1))[0][0])
+        new = None if best == 0 else all_configs(self.mult.bits)[best - 1]
+        self.policy.set_config(target, new)
+        snap = self.telemetry.snapshot().get(target)
+        if snap is not None and snap.get("bit_probs") is not None:
+            self.detector.rebase(target, snap["bit_probs"])
+        self._last_retune_step = self.step
+        ev = RetuneEvent(self.step, target, drift, old, new,
+                         float(scores[old_idx]), float(scores[best]))
+        self.retunes.append(ev)
+        self._emit(ev.describe())
+        return ev

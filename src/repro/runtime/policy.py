@@ -1,0 +1,142 @@
+"""Granular SWAPPER policies: the generalization of a single global
+``SwapConfig`` into hierarchical config maps.
+
+The paper applies its framework "at different granularities"; here a
+:class:`SwapPolicy` maps hierarchical keys to single-bit configs:
+
+* ``"*"``            — global default (the paper's single tuned config)
+* ``"mlp"``          — per-tensor / per-projection-target
+* ``"layer3/mlp"``   — per-layer (keys fall back suffix-wise: ``layer3/mlp``
+  → ``mlp`` → ``*``)
+* tile grids         — per-row-tile (gm, gn) int32 triple grids consumed by
+  the scalar-prefetch ``kernels.ax_matmul_grid`` kernel
+
+Policies serialize to JSON so a tuned policy can be checkpointed alongside
+model weights and shipped to serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AxPolicy
+from repro.core.swapper import NO_SWAP_TRIPLE, SwapConfig, cfg_to_triple
+
+from .scope import GLOBAL_KEY, fallback_chain
+
+__all__ = ["SwapPolicy", "triple_of", "NO_SWAP_TRIPLE"]
+
+# the triple encoding is owned by core.swapper; re-exported here for the
+# runtime-facing API surface
+triple_of = cfg_to_triple
+
+
+def _cfg_from_triple(t) -> Optional[SwapConfig]:
+    op_is_a, bit, value = (int(v) for v in t)
+    if value not in (0, 1):
+        return None
+    return SwapConfig("A" if op_is_a else "B", bit, value)
+
+
+@dataclasses.dataclass
+class SwapPolicy:
+    """A granular, serializable SWAPPER configuration map."""
+
+    mult_name: str
+    configs: Dict[str, Optional[SwapConfig]] = dataclasses.field(default_factory=dict)
+    tile_grids: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+    version: int = 0
+
+    # -- lookups ------------------------------------------------------
+    def lookup(self, key: str) -> Optional[SwapConfig]:
+        for k in fallback_chain(key):
+            if k in self.configs:
+                return self.configs[k]
+        return None
+
+    def set_config(self, key: str, cfg: Optional[SwapConfig]) -> None:
+        self.configs[key] = cfg
+        self.version += 1
+
+    def dyn_tree(self, keys: Sequence[str]) -> Dict[str, jnp.ndarray]:
+        """Per-key traced-input triples for ``runtime.scope.ax_scope``.  The
+        tree structure (keys) is fixed by the caller so the jit cache stays
+        warm across policy updates — only the int32 values change."""
+        return {
+            k: jnp.asarray(triple_of(self.lookup(k)), jnp.int32) for k in keys
+        }
+
+    # -- per-row-tile grids -------------------------------------------
+    def set_tile_grid(self, key: str, grid: np.ndarray) -> None:
+        grid = np.asarray(grid, np.int32)
+        assert grid.ndim == 3 and grid.shape[-1] == 3, grid.shape
+        self.tile_grids[key] = grid
+        self.version += 1
+
+    def tile_grid(self, key: str, gm: int, gn: int) -> np.ndarray:
+        """(gm, gn, 3) int32 config grid for the scalar-prefetch kernel.
+        A stored grid is broadcast over rows/cols as needed; otherwise the
+        hierarchical single-config lookup is broadcast to every tile."""
+        if key in self.tile_grids:
+            g = self.tile_grids[key]
+            assert g.shape[0] in (1, gm) and g.shape[1] in (1, gn), (g.shape, gm, gn)
+            return np.broadcast_to(g, (gm, gn, 3)).astype(np.int32)
+        t = np.asarray(triple_of(self.lookup(key)), np.int32)
+        return np.broadcast_to(t, (gm, gn, 3)).astype(np.int32).copy()
+
+    # -- constructors --------------------------------------------------
+    @classmethod
+    def from_ax_policy(cls, ax: AxPolicy) -> "SwapPolicy":
+        """Lift the static (globally-tuned) AxPolicy into a policy map."""
+        return cls(mult_name=ax.mult_name, configs={GLOBAL_KEY: ax.swap})
+
+    # -- serialization -------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(dict(
+            mult_name=self.mult_name,
+            version=self.version,
+            configs={k: (None if c is None else list(triple_of(c)))
+                     for k, c in self.configs.items()},
+            tile_grids={k: g.tolist() for k, g in self.tile_grids.items()},
+            meta=_jsonable(self.meta),
+        ), indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SwapPolicy":
+        d = json.loads(text)
+        return cls(
+            mult_name=d["mult_name"],
+            configs={k: (None if t is None else _cfg_from_triple(t))
+                     for k, t in d["configs"].items()},
+            tile_grids={k: np.asarray(g, np.int32)
+                        for k, g in d.get("tile_grids", {}).items()},
+            meta=d.get("meta", {}),
+            version=int(d.get("version", 0)),
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "SwapPolicy":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def describe(self) -> str:
+        parts = [f"policy[{self.mult_name} v{self.version}]"]
+        for k, c in sorted(self.configs.items()):
+            parts.append(f"{k}={'noswap' if c is None else c.short()}")
+        return " ".join(parts)
+
+
+def _jsonable(meta: Dict[str, object]):
+    out = {}
+    for k, v in meta.items():
+        out[k] = v.tolist() if isinstance(v, np.ndarray) else v
+    return out

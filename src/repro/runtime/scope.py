@@ -1,0 +1,89 @@
+"""Trace-time dynamic-policy scope.
+
+The adaptive runtime must change the SWAPPER configuration of a *compiled*
+serving/training step without recompiling it.  The host wraps its jit'd step
+so the per-target swap triples enter as ordinary traced inputs, and opens an
+:class:`AxRuntimeScope` around the model call; ``models.layers.dense`` looks
+the scope up at trace time and routes matching projections through the
+dynamic approximate path (``quant.ax.ax_dense_dyn``).
+
+The scope is only consulted while JAX traces the step — on cached executions
+the compiled program already contains the dynamic-config inputs and the
+telemetry outputs, so no Python-level state is involved.
+
+Config keys are hierarchical: a projection target ``"layer3/mlp"`` falls back
+to ``"mlp"`` and then to the global key ``"*"`` (see ``runtime.policy``).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Optional
+
+import jax
+
+__all__ = ["AxRuntimeScope", "active_scope", "ax_scope", "fallback_chain"]
+
+GLOBAL_KEY = "*"
+
+_ACTIVE: Optional["AxRuntimeScope"] = None
+
+
+def fallback_chain(key: str) -> List[str]:
+    """Lookup order for a hierarchical config key: the exact key, then each
+    suffix after stripping a leading path segment, then the global key."""
+    chain = [key]
+    while "/" in key:
+        key = key.split("/", 1)[1]
+        chain.append(key)
+    chain.append(GLOBAL_KEY)
+    return chain
+
+
+class AxRuntimeScope:
+    """Holds the traced (op_is_a, bit, value) triples for the current step and
+    collects per-target telemetry summaries emitted during tracing."""
+
+    def __init__(self, dyn_tree: Optional[Dict[str, jax.Array]], collect: bool = False):
+        self.dyn = dict(dyn_tree or {})
+        self.collect = collect
+        self._records: Dict[str, List[dict]] = {}
+
+    def triple_for(self, target: str) -> Optional[jax.Array]:
+        for key in fallback_chain(target):
+            if key in self.dyn:
+                return self.dyn[key]
+        return None
+
+    def record(self, target: str, summary: dict) -> None:
+        self._records.setdefault(target, []).append(summary)
+
+    def collected(self) -> Dict[str, dict]:
+        """Stack the per-call summaries of each target into one pytree of
+        arrays with a leading call axis (exact limb sums must be recombined
+        per call on the host — summing uint32 limbs across calls could
+        overflow in-graph)."""
+        import jax.numpy as jnp
+
+        out = {}
+        for target, records in self._records.items():
+            keys = records[0].keys()
+            out[target] = {
+                k: jnp.stack([r[k] for r in records]) for k in keys
+            }
+        return out
+
+
+def active_scope() -> Optional[AxRuntimeScope]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def ax_scope(dyn_tree: Optional[Dict[str, jax.Array]], collect: bool = False):
+    """Open a dynamic-policy scope (used inside the function being jitted)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = AxRuntimeScope(dyn_tree, collect=collect)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev

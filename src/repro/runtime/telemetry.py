@@ -1,0 +1,180 @@
+"""Streaming operand/error telemetry for the adaptive SWAPPER runtime.
+
+Two halves:
+
+* **In-graph summaries** (:func:`operand_summary`) — tiny fixed-shape
+  statistics computed on sampled int8 operands inside the compiled step:
+  per-bit occupancy counts of both operands, exact absolute-error limb sums
+  of the *live* policy (same 16-bit-limb scheme as ``core/metrics.py``), and
+  a small operand sample that feeds the controller's re-tune buffer.  Cheap
+  enough to leave on in serving: a handful of shifts/masks and reductions
+  over ≤ ``TELEMETRY_SAMPLE`` elements per projection.
+
+* **Host accumulators** (:class:`Telemetry`) — exponentially-decayed bit
+  occupancy probabilities (the drift signal) plus an exact cumulative
+  :class:`~repro.core.metrics.ErrorStats` window recombined from the limb
+  sums, per target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import ErrorStats, abs_err
+from repro.core.multipliers import AxMult
+from repro.core.swapper import apply_swapper_dyn
+
+__all__ = [
+    "TELEMETRY_SAMPLE",
+    "RETUNE_SAMPLE",
+    "operand_summary",
+    "TargetTelemetry",
+    "Telemetry",
+]
+
+TELEMETRY_SAMPLE = 2048   # elements of each operand entering the bit/error stats
+RETUNE_SAMPLE = 512       # operand sample exported per call for the re-tune buffer
+
+
+def _flat_sample(x, n: int):
+    """First ``n`` elements of ``x`` flattened, tiled cyclically when the
+    tensor is smaller (keeps shapes static and stackable across call sites
+    without zero-padding that would bias the statistics)."""
+    flat = x.reshape(-1)
+    if flat.shape[0] < n:
+        reps = -(-n // flat.shape[0])
+        flat = jnp.concatenate([flat] * reps)
+    return flat[:n]
+
+
+def _bit_counts(v_i32, bits: int):
+    """(bits,) float32 count of set **magnitude** bits per position.  Raw
+    two's-complement bits are a poor drift statistic for signed operands: a
+    symmetric distribution shrinking toward zero keeps every high bit at
+    ~P(0.5) (negative values sign-extend to ones), hiding the shift.  The
+    sign frequency is tracked separately in the summary."""
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    mag = jnp.abs(v_i32)
+    return jnp.sum((mag[:, None] >> shifts) & 1, axis=0).astype(jnp.float32)
+
+
+def operand_summary(xq, wq, mult: AxMult, dyn) -> dict:
+    """Fixed-shape telemetry record for one approximate projection call.
+
+    ``xq``/``wq`` are the quantized integer operands, ``dyn`` the traced
+    (op_is_a, bit, value) triple currently applied.  All outputs are scalars
+    or small vectors so the host transfer stays negligible.
+    """
+    bits = mult.bits
+    a = _flat_sample(xq, TELEMETRY_SAMPLE).astype(jnp.int32)
+    b = _flat_sample(wq, TELEMETRY_SAMPLE).astype(jnp.int32)
+
+    # live-policy error sample (exact limb sums, as in core/tuning._row_stats)
+    approx = apply_swapper_dyn(mult, a, b, dyn[0], dyn[1], dyn[2])
+    e = abs_err(approx, mult.exact_product(a, b), mult.signed)
+    lo = jnp.sum(e & jnp.uint32(0xFFFF), dtype=jnp.uint32)
+    hi = jnp.sum(e >> jnp.uint32(16), dtype=jnp.uint32)
+
+    return dict(
+        bits_a=_bit_counts(a, bits),
+        bits_b=_bit_counts(b, bits),
+        neg_a=jnp.sum((a < 0).astype(jnp.int32)).astype(jnp.float32),
+        neg_b=jnp.sum((b < 0).astype(jnp.int32)).astype(jnp.float32),
+        n=jnp.int32(TELEMETRY_SAMPLE),
+        err_lo=lo,
+        err_hi=hi,
+        err_max=jnp.max(e),
+        err_cnt=jnp.sum((e != 0).astype(jnp.int32)),
+        a_smp=_flat_sample(xq, RETUNE_SAMPLE),
+        b_smp=_flat_sample(wq, RETUNE_SAMPLE),
+    )
+
+
+# ---------------------------------------------------------------------------
+# host side
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TargetTelemetry:
+    """Decayed + exact accumulators for one projection target."""
+
+    bits: int
+    decay: float
+    n_steps: int = 0
+    # (2, bits+1) EW occupancy: per-operand magnitude-bit P(bit==1) columns
+    # plus a trailing sign-frequency column (the drift statistic)
+    bit_probs: Optional[np.ndarray] = None
+    ew_mae: Optional[float] = None             # EW-decayed per-step MAE
+    stats: ErrorStats = dataclasses.field(default_factory=ErrorStats)
+
+    def update(self, rec: Dict[str, np.ndarray]) -> None:
+        """``rec`` holds stacked per-call arrays for one step (leading axis =
+        calls of this target inside the step)."""
+        n = float(np.sum(rec["n"]))
+        probs = np.stack([
+            np.concatenate([np.sum(rec["bits_a"], axis=0),
+                            np.sum(np.atleast_1d(rec["neg_a"]), keepdims=True)]),
+            np.concatenate([np.sum(rec["bits_b"], axis=0),
+                            np.sum(np.atleast_1d(rec["neg_b"]), keepdims=True)]),
+        ]) / max(n, 1.0)
+
+        step = ErrorStats()
+        for lo, hi, mx, cnt, cn in zip(
+            np.atleast_1d(rec["err_lo"]), np.atleast_1d(rec["err_hi"]),
+            np.atleast_1d(rec["err_max"]), np.atleast_1d(rec["err_cnt"]),
+            np.atleast_1d(rec["n"]),
+        ):
+            step.add_limbs(int(cn), int(lo), int(hi), int(mx), int(cnt), 0.0, 0.0)
+        self.stats.n += step.n
+        self.stats.sum_abs += step.sum_abs
+        self.stats.max_abs = max(self.stats.max_abs, step.max_abs)
+        self.stats.count_neq += step.count_neq
+
+        d = self.decay
+        if self.bit_probs is None:
+            self.bit_probs = probs
+            self.ew_mae = step.mae
+        else:
+            self.bit_probs = (1.0 - d) * self.bit_probs + d * probs
+            self.ew_mae = (1.0 - d) * self.ew_mae + d * step.mae
+        self.n_steps += 1
+
+    def snapshot(self) -> dict:
+        return dict(
+            bit_probs=None if self.bit_probs is None else self.bit_probs.copy(),
+            ew_mae=self.ew_mae,
+            mae=self.stats.mae,
+            wce=self.stats.wce,
+            ep=self.stats.ep,
+            n=self.stats.n,
+            n_steps=self.n_steps,
+        )
+
+
+class Telemetry:
+    """Per-target streaming telemetry over the records a scope collected."""
+
+    def __init__(self, bits: int, decay: float = 0.2):
+        self.bits = bits
+        self.decay = decay
+        self.targets: Dict[str, TargetTelemetry] = {}
+
+    def update(self, records: Dict[str, Dict[str, np.ndarray]]) -> None:
+        for target, rec in records.items():
+            tt = self.targets.get(target)
+            if tt is None:
+                tt = self.targets[target] = TargetTelemetry(self.bits, self.decay)
+            tt.update(rec)
+
+    def snapshot(self) -> Dict[str, dict]:
+        return {t: tt.snapshot() for t, tt in self.targets.items()}
+
+    def describe(self) -> str:
+        parts = []
+        for t, tt in sorted(self.targets.items()):
+            parts.append(f"{t}: ew_mae={tt.ew_mae:.2f} mae={tt.stats.mae:.2f} "
+                         f"n={tt.stats.n}")
+        return "telemetry " + " | ".join(parts) if parts else "telemetry <empty>"

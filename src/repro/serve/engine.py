@@ -1,9 +1,16 @@
 """Batched serving loop: prefill once, then greedy/temperature decode steps
-against the sharded KV cache."""
+against the sharded KV cache.
+
+With an :class:`~repro.runtime.AdaptiveController` attached, the decode step
+is compiled **once** with the SWAPPER config as a traced input and telemetry
+summaries as extra outputs; each step the controller folds the telemetry in,
+scores distribution drift, and re-tunes the policy in place — the jit cache
+stays warm throughout (zero recompilations; see runtime/).
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,9 +29,17 @@ class ServeConfig:
 
 
 def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
-             par: Optional[ParallelConfig] = None):
+             par: Optional[ParallelConfig] = None, adaptive=None,
+             param_hook: Optional[Callable] = None):
     """prompt_batch: {'tokens': (B, S)} (or family-specific prefill inputs).
-    Returns (B, max_new_tokens) int32."""
+    Returns (B, max_new_tokens) int32.
+
+    ``adaptive`` — optional AdaptiveController driving the dynamic SWAPPER
+    policy for ``cfg.ax.targets`` projections during decode.
+    ``param_hook(step, params) -> params`` — optional per-step parameter
+    transform (used by the serve driver to inject synthetic distribution
+    drift; values change, shapes don't, so the step is not retraced).
+    """
     S = (prompt_batch["tokens"].shape[1] if "tokens" in prompt_batch
          else prompt_batch["embeds"].shape[1])
     B = jax.tree.leaves(prompt_batch)[0].shape[0]
@@ -41,13 +56,42 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
 
     tok = sample(logits, key)
     out = [tok]
-    step_fn = jax.jit(
-        lambda p, c, t, i: decode_step(p, c, t, i, cfg, par),
-        static_argnames=(),
-    )
-    for i in range(scfg.max_new_tokens - 1):
-        key, sub = jax.random.split(key)
-        logits, cache = step_fn(params, cache, tok[:, None], jnp.int32(S + i))
+
+    if adaptive is None:
+        step_fn = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg, par))
+    else:
+        from repro.runtime import ax_scope
+
+        # telemetry records are per-projection-call outputs of the compiled
+        # step; under lax.scan over layers they would be stuck inside the scan
+        # body, so the adaptive decode unrolls the (short) period stack.
+        # Routing per-layer telemetry through scan carries is a ROADMAP
+        # follow-on.
+        dec_par = dataclasses.replace(par or ParallelConfig(), scan_layers=False)
+
+        def _adaptive_step(p, c, t, i, dyn):
+            with ax_scope(dyn, collect=True) as sc:
+                logits, new_cache = decode_step(p, c, t, i, cfg, dec_par)
+                return logits, new_cache, sc.collected()
+
+        step_fn = jax.jit(_adaptive_step)
+
+    pending = None   # one-step-stale observe: fetch step i-1's telemetry only
+    for i in range(scfg.max_new_tokens - 1):   # after step i is dispatched, so
+        key, sub = jax.random.split(key)       # async dispatch stays pipelined
+        if param_hook is not None:
+            params = param_hook(i, params)
+        if adaptive is None:
+            logits, cache = step_fn(params, cache, tok[:, None], jnp.int32(S + i))
+        else:
+            logits, cache, telem = step_fn(
+                params, cache, tok[:, None], jnp.int32(S + i), adaptive.dyn_tree()
+            )
+            if pending is not None:
+                adaptive.observe(jax.device_get(pending))
+            pending = telem
         tok = sample(logits, sub)
         out.append(tok)
+    if pending is not None:
+        adaptive.observe(jax.device_get(pending))
     return jnp.stack(out, axis=1)

@@ -20,17 +20,24 @@ def init_train_state(params, opt_cfg: AdamWConfig):
     return {"params": params, "opt": adamw_init(params, opt_cfg)}
 
 
-def make_train_step(cfg: ModelConfig, par: ParallelConfig, opt_cfg: AdamWConfig):
+def make_train_step(cfg: ModelConfig, par: ParallelConfig, opt_cfg: AdamWConfig,
+                    adaptive: bool = False):
     """Returns step(state, batch) -> (state, metrics).  With
     par.grad_accum = k, the global batch is split into k microbatches and
     gradients are accumulated in f32 (collectives overlap with compute under
-    GSPMD since the accumulation is a scan)."""
+    GSPMD since the accumulation is a scan).
+
+    With ``adaptive=True`` the step instead takes (state, batch, ax_dyn)
+    where ``ax_dyn`` is the controller's traced swap-triple tree; the SWAPPER
+    forward runs under the dynamic policy and the step's telemetry records
+    come back in ``metrics['ax_telemetry']`` (policy updates between steps
+    never retrace — only the int32 triples change)."""
 
     def loss_fn(params, batch):
         loss, metrics = train_loss(params, batch, cfg, par)
         return loss, metrics
 
-    def step(state, batch):
+    def _step(state, batch):
         params = state["params"]
         k = par.grad_accum
         if k <= 1:
@@ -60,4 +67,33 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, opt_cfg: AdamWConfig)
         metrics = dict(metrics, loss=loss, **opt_metrics)
         return {"params": new_params, "opt": new_opt}, metrics
 
-    return step
+    if not adaptive:
+        return _step
+
+    # telemetry records must be outer-trace outputs: no microbatch scan, no
+    # layer scan, no rematerialized bodies around the tapped projections
+    assert par.grad_accum <= 1, "adaptive SWAPPER training requires grad_accum=1"
+    assert not par.scan_layers, "adaptive SWAPPER training requires scan_layers=False"
+    assert par.remat == "none", "adaptive SWAPPER training requires remat='none'"
+    from repro.runtime import ax_scope
+
+    def adaptive_step(state, batch, ax_dyn):
+        params = state["params"]
+
+        def loss_fn_dyn(params, batch):
+            # telemetry must leave through the loss aux: the records are
+            # created inside this (differentiated) trace
+            with ax_scope(ax_dyn, collect=True) as sc:
+                loss, metrics = train_loss(params, batch, cfg, par)
+            return loss, dict(metrics, ax_telemetry=sc.collected())
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn_dyn, has_aux=True)(
+            params, batch
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, opt_cfg
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return adaptive_step

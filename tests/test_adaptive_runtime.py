@@ -1,0 +1,358 @@
+"""Adaptive SWAPPER runtime: policy maps, drift detection, dynamic-config
+execution paths, and the telemetry -> drift -> re-tune loop (zero-recompile
+guarantees checked via jit cache sizes)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.runtime as R
+from repro.configs.base import AxPolicy
+from repro.quant.ax import ax_dense, ax_dense_dyn, ax_matmul_int, ax_matmul_int_dyn
+
+
+def _policy_static(backend, cfg):
+    if cfg is None:
+        return AxPolicy(backend=backend, swap_enabled=False)
+    return AxPolicy(backend=backend, swap_operand=cfg.operand,
+                    swap_bit=cfg.bit, swap_value=cfg.value)
+
+
+def _dyn(cfg):
+    return jnp.asarray(R.triple_of(cfg), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# SwapPolicy
+# ---------------------------------------------------------------------------
+
+def test_policy_hierarchical_lookup():
+    p = R.SwapPolicy("mul8u_trunc0_4", configs={
+        "*": C.SwapConfig("A", 3, 0),
+        "mlp": C.SwapConfig("B", 5, 1),
+        "layer2/mlp": None,
+    })
+    assert p.lookup("layer2/mlp") is None                 # exact key wins
+    assert p.lookup("layer7/mlp") == C.SwapConfig("B", 5, 1)   # suffix fallback
+    assert p.lookup("mlp") == C.SwapConfig("B", 5, 1)
+    assert p.lookup("attn_out") == C.SwapConfig("A", 3, 0)     # global fallback
+
+
+def test_policy_json_roundtrip():
+    p = R.SwapPolicy("mul8s_trunc0_4", configs={
+        "*": C.SwapConfig("A", 3, 0), "mlp": None,
+    }, meta={"tuned_on": np.ones((2, 8)) * 0.5})
+    p.set_tile_grid("attn_out", np.zeros((4, 1, 3), np.int32))
+    q = R.SwapPolicy.from_json(p.to_json())
+    assert q.mult_name == p.mult_name
+    assert q.lookup("mlp") is None
+    assert q.lookup("attn_qkv") == C.SwapConfig("A", 3, 0)
+    assert q.tile_grids["attn_out"].shape == (4, 1, 3)
+    assert np.asarray(q.meta["tuned_on"]).shape == (2, 8)
+
+
+def test_policy_tile_grid_broadcast():
+    p = R.SwapPolicy("mul8u_trunc0_4", configs={"*": C.SwapConfig("B", 6, 1)})
+    g = p.tile_grid("mlp", 3, 5)
+    assert g.shape == (3, 5, 3)
+    assert (g == np.asarray([0, 6, 1])).all()
+    # stored per-row-tile grid broadcast over columns
+    rows = np.stack([[1, i % 8, 0] for i in range(3)])[:, None, :]
+    p.set_tile_grid("mlp", rows)
+    g2 = p.tile_grid("mlp", 3, 4)
+    assert g2.shape == (3, 4, 3)
+    assert (g2[2, :, 1] == 2).all()
+
+
+def test_dyn_tree_structure_stable_across_updates():
+    p = R.SwapPolicy("mul8u_trunc0_4", configs={"*": C.SwapConfig("A", 3, 0)})
+    t1 = p.dyn_tree(("mlp", "attn_out"))
+    p.set_config("mlp", C.SwapConfig("B", 1, 1))
+    t2 = p.dyn_tree(("mlp", "attn_out"))
+    assert jax.tree.structure(t1) == jax.tree.structure(t2)
+    assert not np.array_equal(np.asarray(t1["mlp"]), np.asarray(t2["mlp"]))
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+
+def test_drift_detector_fires_only_on_shift():
+    det = R.DriftDetector(R.DriftConfig(threshold=0.05, min_steps=2))
+    ref = np.full((2, 8), 0.5)
+    det.rebase("t", ref)
+    for _ in range(3):
+        assert det.check({"t": {"bit_probs": ref + 0.01}}) == []
+    shifted = ref.copy()
+    shifted[0] += 0.4
+    out = det.check({"t": {"bit_probs": shifted}})
+    assert len(out) == 1 and out[0][0] == "t" and out[0][1] > 0.05
+
+
+def test_drift_score_is_mean_abs_diff():
+    a = np.zeros((2, 8))
+    b = np.full((2, 8), 0.25)
+    assert R.drift_score(a, b) == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# dynamic-config execution paths == static paths, all backends
+# ---------------------------------------------------------------------------
+
+CFGS = [None, C.SwapConfig("A", 3, 0), C.SwapConfig("A", 7, 1),
+        C.SwapConfig("B", 0, 0), C.SwapConfig("B", 6, 1)]
+
+
+@pytest.mark.parametrize("backend", ["mxu", "emul", "kernel"])
+def test_ax_matmul_int_dyn_matches_static(backend):
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(-128, 128, (32, 64)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (64, 48)).astype(np.int8))
+    for cfg in CFGS:
+        pol = _policy_static(backend, cfg)
+        ref = ax_matmul_int(a, b, pol)
+        got = ax_matmul_int_dyn(a, b, pol, _dyn(cfg))
+        assert np.array_equal(np.asarray(ref), np.asarray(got)), (backend, cfg)
+
+
+def test_ax_dense_dyn_matches_static_and_grads():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (8, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (64, 48)).astype(np.float32))
+    pol = AxPolicy(backend="mxu")
+    dyn = _dyn(pol.swap)
+    np.testing.assert_allclose(np.asarray(ax_dense(x, w, pol)),
+                               np.asarray(ax_dense_dyn(x, w, pol, dyn)))
+    gs = jax.grad(lambda x, w: ax_dense(x, w, pol).sum(), (0, 1))(x, w)
+    gd = jax.grad(lambda x, w: ax_dense_dyn(x, w, pol, dyn).sum(), (0, 1))(x, w)
+    for p, q in zip(gs, gd):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(q))
+
+
+def test_dyn_config_change_does_not_recompile():
+    """The zero-recompile contract: one compiled fn serves every config."""
+    pol = AxPolicy(backend="mxu")
+    f = jax.jit(lambda x, w, dyn: ax_dense_dyn(x, w, pol, dyn))
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(0, 1, (8, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (64, 48)).astype(np.float32))
+    outs = []
+    for cfg in CFGS:
+        outs.append(np.asarray(f(x, w, _dyn(cfg))))
+    assert f._cache_size() == 1
+    # configs genuinely change the result (not a constant-folded swap)
+    assert any(not np.allclose(outs[0], o) for o in outs[1:])
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_telemetry_limb_exact_and_bit_probs():
+    mult = C.get("mul8u_trunc0_4")
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 256, R.TELEMETRY_SAMPLE)
+    b = rng.integers(0, 256, R.TELEMETRY_SAMPLE)
+    rec = jax.device_get(R.operand_summary(
+        jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32), mult,
+        jnp.asarray(R.NO_SWAP_TRIPLE, jnp.int32)))
+    # limb recombination == exact numpy error sum
+    e = np.abs(np.asarray(mult.fn(jnp.asarray(a, jnp.int32),
+                                  jnp.asarray(b, jnp.int32))).astype(np.int64)
+               - a * b)
+    assert int(rec["err_lo"]) + (int(rec["err_hi"]) << 16) == int(e.sum())
+    assert int(rec["err_max"]) == int(e.max())
+    # bit occupancy
+    expect = np.stack([((a[:, None] >> np.arange(8)) & 1).sum(0),
+                       ((b[:, None] >> np.arange(8)) & 1).sum(0)])
+    got = np.stack([rec["bits_a"], rec["bits_b"]])
+    assert np.array_equal(got, expect.astype(np.float32))
+
+    tel = R.Telemetry(bits=8, decay=0.5)
+    tel.update({"t": {k: np.asarray(v)[None] for k, v in rec.items()}})
+    snap = tel.snapshot()["t"]
+    assert snap["mae"] == pytest.approx(e.mean())
+    # magnitude bits + trailing sign-frequency column per operand
+    assert snap["bit_probs"].shape == (2, 9)
+    assert snap["bit_probs"][:, -1] == pytest.approx([0.0, 0.0])  # unsigned
+
+
+def test_telemetry_sees_symmetric_signed_shrinkage():
+    """Raw two's-complement bit occupancy is blind to a symmetric signed
+    distribution shrinking toward zero (high bits of negatives sign-extend to
+    one); the magnitude-bit statistic must expose it."""
+    mult = C.get("mul8s_trunc0_4")
+    rng = np.random.default_rng(9)
+    dyn = jnp.asarray(R.NO_SWAP_TRIPLE, jnp.int32)
+
+    def probs_of(lo, hi):
+        a = rng.integers(lo, hi, R.TELEMETRY_SAMPLE)
+        rec = jax.device_get(R.operand_summary(
+            jnp.asarray(a, jnp.int32), jnp.asarray(a, jnp.int32), mult, dyn))
+        tel = R.Telemetry(bits=8, decay=1.0)
+        tel.update({"t": {k: np.asarray(v)[None] for k, v in rec.items()}})
+        return tel.snapshot()["t"]["bit_probs"]
+
+    wide = probs_of(-128, 128)
+    narrow = probs_of(-6, 7)
+    assert R.drift_score(wide, narrow) > 0.2
+
+
+# ---------------------------------------------------------------------------
+# controller: drift -> re-tune loop
+# ---------------------------------------------------------------------------
+
+def _make_controller(start_cfg, **kw):
+    policy = R.SwapPolicy("mul8u_trunc0_4", configs={"*": start_cfg})
+    cfg = dict(decay=0.4, drift_threshold=0.05, min_observe_steps=2,
+               cooldown_steps=2, buffer_size=1024)
+    cfg.update(kw)
+    ctrl = R.AdaptiveController(policy, targets=("stream",),
+                                cfg=R.AdaptiveConfig(**cfg))
+    ctrl.warmup()
+    return ctrl
+
+
+def test_controller_retunes_under_drift_zero_recompiles():
+    rng = np.random.default_rng(6)
+    mult = C.get("mul8u_trunc0_4")
+    start = C.component_sweep(mult, tile=256).best("mae")
+    ctrl = _make_controller(start)
+    cache_after_warmup = None
+
+    for step in range(20):
+        if step < 8:
+            a = rng.integers(128, 256, 2048)    # tuned-on regime
+        else:
+            a = rng.integers(0, 96, 2048)       # drifted regime
+        b = rng.integers(0, 256, 2048)
+        ctrl.observe_operands("stream", a, b)
+        if step == 0:
+            cache_after_warmup = ctrl.scorer_cache_size()
+
+    assert len(ctrl.retunes) >= 1
+    first = ctrl.retunes[0]
+    assert first.step >= 8                       # fired after the shift
+    assert first.new_score <= first.old_score    # re-tune can only help (on buffer)
+    assert ctrl.policy.version >= 1
+    # the vmapped scorer never recompiled across re-tunes
+    assert ctrl.scorer_cache_size() == cache_after_warmup
+    # telemetry streamed throughout
+    assert ctrl.telemetry.snapshot()["stream"]["n"] > 0
+
+
+def test_controller_quiet_without_drift():
+    rng = np.random.default_rng(7)
+    ctrl = _make_controller(C.SwapConfig("A", 3, 0))
+    for _ in range(15):
+        ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                              rng.integers(0, 256, 2048))
+    assert ctrl.retunes == []
+
+
+def test_adaptive_beats_static_under_drift():
+    """The acceptance-criterion property in miniature: after drift, the
+    adaptive policy's live MAE is below the stale static config's."""
+    from repro.runtime.controller import _score_configs
+
+    rng = np.random.default_rng(8)
+    mult = C.get("mul8u_trunc0_4")
+    ctrl = _make_controller(None)
+    # phase 0: high-A regime; tune statically on it via a forced retune
+    a0, b0 = rng.integers(128, 256, 2048), rng.integers(0, 256, 2048)
+    for _ in range(3):
+        ctrl.observe_operands("stream", a0, b0)
+    ctrl.retune("stream")
+    static_cfg = ctrl.policy.lookup("stream")
+
+    # phase 1: drifted regime
+    a1 = rng.integers(0, 96, 2048)
+    b1 = rng.integers(0, 256, 2048)
+    for _ in range(8):
+        ctrl.observe_operands("stream", rng.integers(0, 96, 2048),
+                              rng.integers(0, 256, 2048))
+    assert len(ctrl.retunes) >= 2                # re-tuned after the drift
+    adapt_cfg = ctrl.policy.lookup("stream")
+    t3 = jnp.asarray(np.stack([R.triple_of(static_cfg), R.triple_of(adapt_cfg)]),
+                     jnp.int32)
+    maes = np.asarray(_score_configs(mult, jnp.asarray(a1, jnp.int32),
+                                     jnp.asarray(b1, jnp.int32), t3, "mae"))
+    assert maes[1] < maes[0]
+
+
+def test_adaptive_train_step_telemetry_and_no_retrace():
+    """make_train_step(adaptive=True): telemetry arrives via the loss aux,
+    loss stays finite, and a policy (dyn) change does not retrace the step."""
+    import repro.configs as CFG
+    from repro.train import AdamWConfig, init_train_state, make_train_step
+    from repro.configs.base import ParallelConfig
+    from repro.models import init_params
+
+    cfg = CFG.reduced(CFG.ARCHS["qwen2-72b"])
+    cfg = dataclasses.replace(cfg, n_layers=2, ax=AxPolicy(backend="mxu"))
+    par = ParallelConfig(fsdp=False, seq_shard=False, scan_layers=False,
+                         remat="none")
+    step = jax.jit(make_train_step(cfg, par, AdamWConfig(lr=1e-3), adaptive=True))
+
+    state = init_train_state(init_params(jax.random.PRNGKey(0), cfg),
+                             AdamWConfig(lr=1e-3))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32),
+    }
+    policy = R.SwapPolicy.from_ax_policy(cfg.ax)
+    state, m1 = step(state, batch, policy.dyn_tree(cfg.ax.targets))
+    policy.set_config("mlp", C.SwapConfig("B", 5, 1))
+    state, m2 = step(state, batch, policy.dyn_tree(cfg.ax.targets))
+    assert step._cache_size() == 1                 # dyn change never retraces
+    for m in (m1, m2):
+        assert np.isfinite(float(m["loss"]))
+        for t in cfg.ax.targets:
+            assert float(np.sum(m["ax_telemetry"][t]["n"])) > 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: adaptive serving on a tiny model
+# ---------------------------------------------------------------------------
+
+def test_adaptive_generate_end_to_end():
+    import repro.configs as CFG
+    from repro.models import init_params
+    from repro.serve import ServeConfig, generate
+
+    cfg = CFG.reduced(CFG.ARCHS["qwen2-72b"])
+    cfg = dataclasses.replace(cfg, n_layers=2, ax=AxPolicy(backend="mxu"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    policy = R.SwapPolicy.from_ax_policy(cfg.ax)
+    ctrl = R.AdaptiveController(
+        policy, targets=cfg.ax.targets,
+        cfg=R.AdaptiveConfig(drift_threshold=0.02, min_observe_steps=1,
+                             cooldown_steps=1, buffer_size=1024))
+    ctrl.warmup()
+
+    def hook(step, params):
+        if step != 3:
+            return params
+
+        def perturb(w):
+            if w.ndim < 2:
+                return w
+            return jnp.where(jnp.arange(w.shape[-1]) % 2 == 0, w * 0.05, w)
+
+        return jax.tree.map(perturb, params)
+
+    rng = np.random.default_rng(0)
+    prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+    out = generate(params, prompt, cfg, ServeConfig(max_new_tokens=10),
+                   adaptive=ctrl, param_hook=hook)
+    assert out.shape == (2, 10)
+    # telemetry streamed for every approximate target
+    snap = ctrl.telemetry.snapshot()
+    for t in cfg.ax.targets:
+        assert snap[t]["n"] > 0
+    assert len(ctrl.retunes) >= 1                # injected drift was caught

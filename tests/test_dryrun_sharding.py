@@ -22,10 +22,15 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _fake_mesh(shape, axes):
-    """Abstract mesh for rule tests (no devices needed)."""
+    """Abstract mesh for rule tests (no devices needed).  The AbstractMesh
+    constructor signature changed across jax releases: older takes
+    (shape, axis_names), newer takes a ((name, size), ...) tuple."""
     from jax.sharding import AbstractMesh
 
-    return AbstractMesh(shape, axes)
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(shape, axes)
 
 
 def test_param_spec_rules():

@@ -3,8 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st  # property tests skip without hypothesis
 
 import repro.core as C
 import repro.kernels as K
@@ -114,6 +114,62 @@ def test_ax_matmul_property(m, k, n, bit, value):
     got = K.ax_matmul(a, b, mult, swap, block_m=8, block_n=8, block_k=8)
     ref = K.ax_matmul_ref(a, b, mult, swap)
     assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# ax_matmul_grid (per-tile swap-config grids, scalar prefetch)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mname", ["mul8s_trunc0_4", "mul8u_trunc0_4", "mul8s_drum3_4"])
+def test_ax_matmul_grid_matches_ref(mname):
+    rng = np.random.default_rng(21)
+    lo, hi, dt = (-128, 128, np.int8) if mname.startswith("mul8s") else (0, 256, np.uint8)
+    a = jnp.asarray(rng.integers(lo, hi, (64, 32)).astype(dt))
+    b = jnp.asarray(rng.integers(lo, hi, (32, 64)).astype(dt))
+    m = C.get(mname)
+    grid = np.stack([
+        np.asarray(rng.integers(0, 2, (2, 2)), np.int32),   # op_is_a
+        np.asarray(rng.integers(0, 8, (2, 2)), np.int32),   # bit
+        np.asarray(rng.integers(0, 3, (2, 2)), np.int32),   # value (2 => noswap)
+    ], axis=-1)
+    got = K.ax_matmul_grid(a, b, m, jnp.asarray(grid), block_m=32, block_n=32, block_k=16)
+    ref = K.ax_matmul_grid_ref(a, b, m, jnp.asarray(grid))
+    assert got.dtype == jnp.int32
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_ax_matmul_grid_uniform_equals_static():
+    """A uniform grid reproduces the statically-configured kernel exactly."""
+    rng = np.random.default_rng(22)
+    a = jnp.asarray(rng.integers(-128, 128, (64, 64)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (64, 64)).astype(np.int8))
+    m = C.get("mul8s_trunc0_4")
+    for cfg, triple in [(C.SwapConfig("A", 5, 1), (1, 5, 1)),
+                        (C.SwapConfig("B", 2, 0), (0, 2, 0)),
+                        (None, (1, 0, 2))]:
+        uni = jnp.broadcast_to(jnp.asarray(triple, jnp.int32), (2, 2, 3))
+        got = K.ax_matmul_grid(a, b, m, uni, block_m=32, block_n=32, block_k=32)
+        ref = K.ax_matmul(a, b, m, cfg, block_m=32, block_n=32, block_k=32)
+        assert np.array_equal(np.asarray(got), np.asarray(ref)), cfg
+
+
+def test_ax_matmul_grid_change_does_not_recompile():
+    """The config grid is a traced operand: per-tile policies update without
+    retracing the kernel (the adaptive-runtime contract)."""
+    rng = np.random.default_rng(23)
+    a = jnp.asarray(rng.integers(-128, 128, (64, 64)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (64, 64)).astype(np.int8))
+    m = C.get("mul8s_trunc0_4")
+    outs = []
+    size_after_first = None
+    for triple in ((1, 3, 0), (0, 6, 1), (1, 0, 2)):
+        grid = jnp.broadcast_to(jnp.asarray(triple, jnp.int32), (2, 2, 3))
+        outs.append(np.asarray(K.ax_matmul_grid(a, b, m, grid,
+                                                block_m=32, block_n=32, block_k=32)))
+        if size_after_first is None:
+            size_after_first = K.ax_matmul_grid._cache_size()
+    assert K.ax_matmul_grid._cache_size() == size_after_first
+    assert any(not np.array_equal(outs[0], o) for o in outs[1:])
 
 
 # ---------------------------------------------------------------------------

@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st  # property tests skip without hypothesis
 
 import repro.core as C
 

@@ -4,8 +4,8 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st  # property tests skip without hypothesis
 
 import repro.core as C
 
@@ -47,6 +47,51 @@ def test_dyn_matches_static():
             C.apply_swapper_dyn(m, jnp.asarray(a), jnp.asarray(b), *C.cfg_to_dyn(cfg))
         )
         assert np.array_equal(ref, got)
+
+
+def test_swap_mask_signed_negative_operands():
+    """Two's-complement bit extraction: for negative int8 operands the mask
+    must read the bit of the 8-bit representation (e.g. -1 = 0xFF has every
+    bit set), matching a uint8 view of the same values."""
+    a = np.arange(-128, 128, dtype=np.int32)
+    b = np.zeros_like(a)
+    for bit in range(8):
+        for value in (0, 1):
+            cfg = C.SwapConfig("A", bit, value)
+            mask = np.asarray(C.swap_mask(jnp.asarray(a), jnp.asarray(b), cfg))
+            expect = ((a.astype(np.uint8).astype(np.int64) >> bit) & 1) == value
+            assert np.array_equal(mask, expect), (bit, value)
+
+
+def test_dyn_matches_static_all_configs_signed():
+    """cfg_to_dyn / apply_swapper_dyn equivalence with the static path over
+    the whole 4M config space (plus NoSwap) on signed operands."""
+    m = C.get("mul8s_bam_v2_h1")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-128, 128, 512).astype(np.int32))
+    b = jnp.asarray(rng.integers(-128, 128, 512).astype(np.int32))
+    for cfg in [None] + C.all_configs(8):
+        if cfg is None:
+            ref = m.fn(a, b)
+        else:
+            ref = C.apply_swapper(m, a, b, cfg)
+        got = C.apply_swapper_dyn(m, a, b, *C.cfg_to_dyn(cfg))
+        assert np.array_equal(np.asarray(ref), np.asarray(got)), cfg
+
+
+def test_oracle_never_exceeds_either_order_signed():
+    """oracle_mult error <= min over both operand orders, signed full grid."""
+    m = C.get("mul8s_trunc0_4")
+    o = C.oracle_mult(m)
+    _, A, B = _full_grid(8, True)
+    Aj, Bj = jnp.asarray(A), jnp.asarray(B)
+    ex = np.asarray(m.exact_product(Aj, Bj)).astype(np.int64)
+    e_orc = np.abs(np.asarray(o.fn(Aj, Bj)).astype(np.int64) - ex)
+    e0 = np.abs(np.asarray(m.fn(Aj, Bj)).astype(np.int64) - ex)
+    e1 = np.abs(np.asarray(m.fn(Bj, Aj)).astype(np.int64) - ex)
+    assert (e_orc <= e0).all()
+    assert (e_orc <= e1).all()
+    assert np.array_equal(e_orc, np.minimum(e0, e1))
 
 
 def test_oracle_never_worse_pointwise():
@@ -127,7 +172,7 @@ def test_swap_mask_property(bit, value, op):
     a = np.arange(256, dtype=np.int32)
     b = (255 - a).astype(np.int32)
     cfg = C.SwapConfig(op, bit, value)
-    mask = np.asarray(C.swap_mask(jnp.asarray(a), jnp.asarray(b), cfg, 8))
+    mask = np.asarray(C.swap_mask(jnp.asarray(a), jnp.asarray(b), cfg))
     src = a if op == "A" else b
     assert np.array_equal(mask, ((src >> bit) & 1) == value)
 
