@@ -3,9 +3,10 @@
 The paper synthesizes the swap front-end in 45 nm (power/area/delay); the TPU
 analog is the kernel-level overhead of the fused single-bit decision:
 
-  * 'mxu' backend: NoSwap = 1 int8 MXU matmul, SWAPPER = 2 int8 matmuls +
-    two vector selects (the closed-form factorization) -> measured FLOP ratio
-    and wall time on the exact/ax/swap variants.
+  * 'mxu' backend: NoSwap = 1 int8 MXU matmul over K, SWAPPER = 1 K-stacked
+    int8 matmul over 2K (the factorization limbs concatenated along the
+    inner dimension) -> measured FLOP ratio and wall time on the
+    exact/ax/swap variants.
   * 'kernel' (VPU/pallas, interpret) wall time per multiply.
 """
 from __future__ import annotations
@@ -49,7 +50,7 @@ def run(m=256, k=256, n_=256):
     pol_sw = AxPolicy(mult_name="mul8s_trunc0_4", backend="mxu")
     f_sw = jax.jit(lambda a, b: ax_matmul_int(a, b, pol_sw))
     t_sw = _time(f_sw, a, b)
-    rows.append(dict(impl="ax SWAPPER (mxu, 2 matmuls + selects)", seconds=t_sw,
+    rows.append(dict(impl="ax SWAPPER (mxu, K-stacked 1 matmul)", seconds=t_sw,
                      ratio=t_sw / t_exact))
 
     mult = C.get("mul8s_trunc0_4")

@@ -3,7 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--full]
 
 Prints each table and a ``name,us_per_call,derived`` CSV summary line per
-benchmark (derived = the table's headline number).
+benchmark (derived = the table's headline number).  Also runs the hot-path
+perf microbenchmarks and writes ``BENCH_2.json`` (old-vs-new dispatch /
+reduction / decode numbers — the regression baseline for later PRs).
 """
 from __future__ import annotations
 
@@ -11,13 +13,16 @@ import argparse
 import sys
 import time
 
-from . import adaptive_table, app_table, component_table, hw_table, roofline_table
+from . import (adaptive_table, app_table, component_table, hw_table,
+               perf_table, roofline_table)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small fast subset")
     ap.add_argument("--full", action="store_true", help="all multipliers + ALL parts")
+    ap.add_argument("--bench-out", default="BENCH_2.json",
+                    help="perf_table JSON artifact path")
     args = ap.parse_args()
 
     csv = ["name,us_per_call,derived"]
@@ -51,6 +56,18 @@ def main() -> None:
                f"adaptive_gain_vs_static={100*ad['gain_vs_static']:.1f}%"
                f" retunes={ad['retunes']}"
                f" telemetry_us_per_step={ad['telemetry_us_per_step']:.0f}")
+
+    t0 = time.time()
+    perf = perf_table.run(quick=args.quick)
+    print("\n" + perf_table.format_table(perf))
+    perf_table.write_json(perf, args.bench_out)
+    print(f"(perf_table written to {args.bench_out})")
+    d = perf["matmul_dispatch"]
+    csv.append(f"perf_table,{1e6*(time.time()-t0):.0f},"
+               f"dispatch={d['static_2mm']['dot_generals']}->"
+               f"{d['static_stacked']['dot_generals']}"
+               f" reduction_steps_ratio={perf['kernel_reduction']['reduction_step_ratio']:.0f}x"
+               f" decode_speedup={perf['decode']['speedup']:.2f}x")
 
     t0 = time.time()
     hw = hw_table.run()

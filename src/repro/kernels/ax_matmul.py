@@ -14,7 +14,9 @@ TPU adaptation notes
   fit VMEM with MXU-aligned (multiple-of-128) lane dims.
 * The K reduction runs as the innermost grid dimension with output-block
   revisiting (init at k==0, accumulate after), the standard Pallas matmul
-  reduction pattern.
+  reduction pattern.  Within a tile the reduction is slab-blocked: K is
+  processed in (bm, k_slab, bn) sublane slabs with one select/multiply/
+  reduce per slab instead of ``bk`` rank-1 steps (see ``_accumulate_tile``).
 * The LUT path (arbitrary 8-bit circuits, EvoApprox compatibility) keeps the
   64 Ki-entry table resident in VMEM (256 KiB as int32) and gathers per
   element; on real TPUs a VMEM gather lowers slowly, so the closed-form path
@@ -53,11 +55,33 @@ def _swap_select(a, b, swap: Optional[SwapConfig]):
     return aa, bb
 
 
-def _accumulate_tile(a_ref, b_ref, o_ref, select, mult: AxMult, bk: int):
+DEFAULT_K_SLAB = 8   # sublanes per reduction slab (one VPU register of int32)
+
+
+def _pick_k_slab(bk: int, k_slab: Optional[int]) -> int:
+    """Largest divisor of ``bk`` that is <= ``k_slab`` (None = default)."""
+    want = DEFAULT_K_SLAB if k_slab is None else k_slab
+    ks = min(want, bk)
+    while bk % ks:
+        ks -= 1
+    return max(ks, 1)
+
+
+def _accumulate_tile(a_ref, b_ref, o_ref, select, mult: AxMult, bk: int,
+                     k_slab: Optional[int] = None):
     """Shared (bm, bn) output-tile accumulation (K innermost, output-block
-    revisiting): ``select(a_col, b_row)`` applies the SWAPPER front-end —
-    static config for ``_ax_matmul_kernel``, scalar-prefetched triple for the
-    grid kernel."""
+    revisiting): ``select(a, b)`` applies the SWAPPER front-end — static
+    config for ``_ax_matmul_kernel``, scalar-prefetched triple for the grid
+    kernel.
+
+    The K reduction is slab-blocked sublane vectorization: instead of ``bk``
+    rank-1 VPU steps (one (bm, 1) x (1, bn) broadcast multiply per k), each
+    loop iteration materializes a (bm, ks, bn) slab — ks sublanes of A
+    against ks rows of B — and performs ONE select/multiply/reduce over the
+    slab, cutting the loop trip count (and per-step select/multiply dispatch
+    overhead) by ks while keeping the slab temporary VMEM-resident
+    (bm * ks * bn * 4 B = 512 KiB at the default 128/8/128).  ``k_slab=1``
+    reproduces the legacy rank-1 schedule (kept as the benchmark baseline)."""
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -65,23 +89,26 @@ def _accumulate_tile(a_ref, b_ref, o_ref, select, mult: AxMult, bk: int):
 
     a_blk = a_ref[...].astype(jnp.int32)          # (bm, bk)
     b_blk = b_ref[...].astype(jnp.int32)          # (bk, bn)
+    ks = _pick_k_slab(bk, k_slab)
 
-    def body(k, acc):
-        # rank-1 slab: every scalar product of A[:, k] x B[k, :]
-        a_col = jax.lax.dynamic_slice_in_dim(a_blk, k, 1, axis=1)   # (bm, 1)
-        b_row = jax.lax.dynamic_slice_in_dim(b_blk, k, 1, axis=0)   # (1, bn)
-        aa, bb = select(a_col, b_row)
-        prod = mult.fn(aa, bb).astype(jnp.int32)                    # (bm, bn)
-        return acc + prod
+    def body(s, acc):
+        # (bm, ks, bn) slab: ks consecutive rank-1 products, one dispatch
+        a_slab = jax.lax.dynamic_slice_in_dim(a_blk, s * ks, ks, axis=1)  # (bm, ks)
+        b_slab = jax.lax.dynamic_slice_in_dim(b_blk, s * ks, ks, axis=0)  # (ks, bn)
+        aa, bb = select(a_slab[:, :, None], b_slab[None, :, :])
+        prod = mult.fn(aa, bb).astype(jnp.int32)                          # (bm, ks, bn)
+        return acc + jnp.sum(prod, axis=1, dtype=jnp.int32)
 
-    acc = jax.lax.fori_loop(0, bk, body, jnp.zeros(o_ref.shape, jnp.int32))
+    acc = jax.lax.fori_loop(0, bk // ks, body, jnp.zeros(o_ref.shape, jnp.int32))
     o_ref[...] += acc
 
 
-def _ax_matmul_kernel(a_ref, b_ref, o_ref, *, mult: AxMult, swap, bk: int):
+def _ax_matmul_kernel(a_ref, b_ref, o_ref, *, mult: AxMult, swap, bk: int,
+                      k_slab: Optional[int] = None):
     """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost."""
     _accumulate_tile(a_ref, b_ref, o_ref,
-                     lambda a, b: _swap_select(a, b, swap), mult, bk)
+                     lambda a, b: _swap_select(a, b, swap), mult, bk,
+                     k_slab=k_slab)
 
 
 def ax_matmul_pallas(
@@ -93,9 +120,12 @@ def ax_matmul_pallas(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    k_slab: Optional[int] = None,
     interpret: bool = True,
 ) -> jax.Array:
-    """Blocked approximate matmul; returns int32 (M, N)."""
+    """Blocked approximate matmul; returns int32 (M, N).  ``k_slab`` sets
+    the sublane depth of the vectorized K reduction (None = auto; 1 = the
+    legacy rank-1 schedule, kept for benchmarking)."""
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
@@ -103,7 +133,8 @@ def ax_matmul_pallas(
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (a.shape, b.shape, (bm, bn, bk))
     grid = (M // bm, N // bn, K // bk)
 
-    kernel = functools.partial(_ax_matmul_kernel, mult=mult, swap=swap, bk=bk)
+    kernel = functools.partial(_ax_matmul_kernel, mult=mult, swap=swap, bk=bk,
+                               k_slab=k_slab)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -124,7 +155,8 @@ def ax_matmul_pallas(
 # granular (per-tile) swap-config grids — the adaptive-runtime kernel
 # ---------------------------------------------------------------------------
 
-def _ax_matmul_grid_kernel(cfg_ref, a_ref, b_ref, o_ref, *, mult: AxMult, bk: int):
+def _ax_matmul_grid_kernel(cfg_ref, a_ref, b_ref, o_ref, *, mult: AxMult, bk: int,
+                           k_slab: Optional[int] = None):
     """Like ``_ax_matmul_kernel`` but the swap decision comes from a
     scalar-prefetched (grid_m, grid_n, 3) int32 triple grid indexed by the
     output-tile coordinates: op_is_a / bit / value are runtime values, so the
@@ -134,12 +166,12 @@ def _ax_matmul_grid_kernel(cfg_ref, a_ref, b_ref, o_ref, *, mult: AxMult, bk: in
     bit = cfg_ref[i, j, 1]
     value = cfg_ref[i, j, 2]
 
-    def select(a_col, b_row):
+    def select(a, b):
         # core.swapper owns the triple semantics; pure jnp, fine in-kernel
-        sel = swap_mask_dyn(a_col, b_row, op_is_a, bit, value)      # (bm, bn)
-        return jnp.where(sel, b_row, a_col), jnp.where(sel, a_col, b_row)
+        sel = swap_mask_dyn(a, b, op_is_a, bit, value)    # slab broadcast
+        return jnp.where(sel, b, a), jnp.where(sel, a, b)
 
-    _accumulate_tile(a_ref, b_ref, o_ref, select, mult, bk)
+    _accumulate_tile(a_ref, b_ref, o_ref, select, mult, bk, k_slab=k_slab)
 
 
 def ax_matmul_grid_pallas(
@@ -151,6 +183,7 @@ def ax_matmul_grid_pallas(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    k_slab: Optional[int] = None,
     interpret: bool = True,
 ) -> jax.Array:
     """Blocked approximate matmul with a per-output-tile swap-config grid
@@ -163,7 +196,8 @@ def ax_matmul_grid_pallas(
     grid = (M // bm, N // bn, K // bk)
     assert cfg_grid.shape == (grid[0], grid[1], 3), (cfg_grid.shape, grid)
 
-    kernel = functools.partial(_ax_matmul_grid_kernel, mult=mult, bk=bk)
+    kernel = functools.partial(_ax_matmul_grid_kernel, mult=mult, bk=bk,
+                               k_slab=k_slab)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,

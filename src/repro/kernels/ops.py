@@ -23,7 +23,9 @@ __all__ = ["ax_matmul", "ax_matmul_dequant", "ax_matmul_grid", "component_sweep_
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mult", "swap", "block_m", "block_n", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("mult", "swap", "block_m", "block_n", "block_k", "k_slab",
+                     "interpret"),
 )
 def ax_matmul(
     a: jax.Array,
@@ -34,12 +36,16 @@ def ax_matmul(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    k_slab: Optional[int] = None,
     interpret: bool = True,
 ) -> jax.Array:
-    """int8 x int8 -> int32 approximate matmul with fused SWAPPER."""
+    """int8 x int8 -> int32 approximate matmul with fused SWAPPER.
+    ``k_slab`` controls the vectorized reduction depth (None = auto,
+    1 = legacy rank-1 schedule)."""
     return ax_matmul_pallas(
         a, b, mult, swap,
-        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+        block_m=block_m, block_n=block_n, block_k=block_k, k_slab=k_slab,
+        interpret=interpret,
     )
 
 
@@ -69,7 +75,8 @@ def ax_matmul_dequant(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mult", "block_m", "block_n", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("mult", "block_m", "block_n", "block_k", "k_slab", "interpret"),
 )
 def ax_matmul_grid(
     a: jax.Array,                 # (M, K) int8
@@ -80,6 +87,7 @@ def ax_matmul_grid(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    k_slab: Optional[int] = None,
     interpret: bool = True,
 ) -> jax.Array:
     """Approximate matmul with a per-output-tile SWAPPER config grid.  The
@@ -87,7 +95,8 @@ def ax_matmul_grid(
     re-tunes tile configs without triggering a recompile."""
     return ax_matmul_grid_pallas(
         a, b, mult, cfg_grid,
-        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+        block_m=block_m, block_n=block_n, block_k=block_k, k_slab=k_slab,
+        interpret=interpret,
     )
 
 

@@ -6,16 +6,21 @@ Three backends:
   families, m(a, b) = f(a) * g(b) elementwise (operand truncation zeroes low
   bits of each operand; partial-product perforation zeroes rows of B), so the
   approximate inner product factorizes into exact matmuls of transformed int8
-  operands — which run on the MXU:
+  operands — which run on the MXU.  The two-limb factorization
 
-      NoSwap:        C = f(A) @ g(B)                       (1 int8 matmul)
+      NoSwap:        C = f(A) @ g(B)
       swap on A bit: C = (s⊙g(A)) @ f(B) + ((1-s)⊙f(A)) @ g(B)
       swap on B bit: C = g(A) @ (s⊙f(B)) + f(A) @ ((1-s)⊙g(B))
-                                                           (2 int8 matmuls)
 
-  where s is the SWAPPER bit mask of the decision operand.  This turns the
-  paper's per-multiply mechanism into MXU-rate compute instead of a VPU
-  elementwise pipeline — bit-identical to the Pallas kernel (tested).
+  (s = the SWAPPER bit mask of the decision operand) is dispatched as a
+  **single K-stacked int8 matmul** over a concatenated 2K inner dimension,
+  ``[X1|X2] @ [Y1;Y2]`` — int32 accumulation makes the stacked reduction
+  bit-identical to ``X1@Y1 + X2@Y2`` while halving the dispatch count and
+  doubling MXU occupancy per call.  The pre-stacking 2-matmul forms are kept
+  (``ax_matmul_int_2mm`` / ``ax_matmul_int_dyn_2mm``) as bit-identity oracles
+  and benchmark baselines.  This turns the paper's per-multiply mechanism
+  into MXU-rate compute instead of a VPU elementwise pipeline — bit-identical
+  to the Pallas kernel (tested).
 
 * ``kernel`` — the Pallas ``ax_matmul`` VPU kernel (arbitrary families,
   including LUT circuits).
@@ -45,6 +50,8 @@ __all__ = [
     "separable_transforms",
     "ax_matmul_int",
     "ax_matmul_int_dyn",
+    "ax_matmul_int_2mm",
+    "ax_matmul_int_dyn_2mm",
 ]
 
 
@@ -108,6 +115,46 @@ def _int_mm(a, b):
     )
 
 
+def _stacked_mm(x1, y1, x2, y2):
+    """``X1 @ Y1 + X2 @ Y2`` as ONE int8 matmul over a concatenated 2K inner
+    dimension: ``[X1|X2] @ [Y1;Y2]``.  int32 accumulation is exact, so the
+    stacked reduction is bit-identical to the two-matmul sum while halving
+    the dispatch count (one MXU pass over 2K instead of two over K)."""
+    x = jnp.concatenate([x1, x2], axis=-1)
+    y = jnp.concatenate([y1, y2], axis=0)
+    return _int_mm(x, y)
+
+
+def _mxu_limbs(ai, bi, f, g, swap: SwapConfig):
+    """The (X1, Y1, X2, Y2) int8 limbs of the static swap factorization."""
+    if swap.operand == "A":
+        s = _swap_mask(ai, swap).astype(jnp.int32)
+        return ((s * g(ai)).astype(jnp.int8), f(bi).astype(jnp.int8),
+                ((1 - s) * f(ai)).astype(jnp.int8), g(bi).astype(jnp.int8))
+    s = _swap_mask(bi, swap).astype(jnp.int32)
+    return (g(ai).astype(jnp.int8), (s * f(bi)).astype(jnp.int8),
+            f(ai).astype(jnp.int8), ((1 - s) * g(bi)).astype(jnp.int8))
+
+
+def _mxu_limbs_dyn(ai, bi, f, g, op_is_a, bit, value):
+    """The (X1, Y1, X2, Y2) limbs with the swap decision as traced scalars.
+
+    With row mask sa (decision on A) / column mask sb (decision on B), each
+    gated by op_is_a, ``X1 @ Y1 + X2 @ Y2`` equals the A-form or B-form
+    static factorization for every triple.  ``value == 2`` (the NoSwap
+    encoding) zeroes sa and sb, which zeroes one limb entirely — the traced
+    NoSwap fast path: the compiled program stays config-agnostic and the
+    zero limb contributes nothing to the stacked reduction."""
+    is_a = op_is_a == 1
+    sa = ((((ai >> bit) & 1) == value) & is_a).astype(jnp.int32)
+    sb = ((((bi >> bit) & 1) == value) & ~is_a).astype(jnp.int32)
+    x1 = jnp.where(is_a, sa * g(ai), g(ai)).astype(jnp.int8)
+    y1 = jnp.where(is_a, f(bi), sb * f(bi)).astype(jnp.int8)
+    x2 = jnp.where(is_a, (1 - sa) * f(ai), f(ai)).astype(jnp.int8)
+    y2 = jnp.where(is_a, g(bi), (1 - sb) * g(bi)).astype(jnp.int8)
+    return x1, y1, x2, y2
+
+
 def _pad_for_kernel(a_i8, b_i8):
     """Flatten leading dims and zero-pad both operands to block multiples for
     the Pallas kernels.  Returns (a2d, b, lead_shape, m0, n0, (bm, bn, bk));
@@ -132,7 +179,11 @@ def _pad_for_kernel(a_i8, b_i8):
 
 
 def ax_matmul_int(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
-    """Approximate int matmul (..., K) @ (K, N) -> (..., N) int32."""
+    """Approximate int matmul (..., K) @ (K, N) -> (..., N) int32.
+
+    The mxu backend dispatches exactly one int8 ``dot_general`` per call:
+    NoSwap is the plain ``f(A) @ g(B)``, a swap config K-stacks the two
+    factorization limbs into a single matmul over the 2K inner dimension."""
     mult = M.get(policy.mult_name)
     swap = policy.swap
     if policy.backend == "mxu":
@@ -143,15 +194,7 @@ def ax_matmul_int(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
         bi = b_i8.astype(jnp.int32)
         if swap is None:
             return _int_mm(f(ai).astype(jnp.int8), g(bi).astype(jnp.int8))
-        if swap.operand == "A":
-            s = _swap_mask(ai, swap).astype(jnp.int32)
-            a1 = (s * g(ai)).astype(jnp.int8)          # swapped rows take g
-            a2 = ((1 - s) * f(ai)).astype(jnp.int8)
-            return _int_mm(a1, f(bi).astype(jnp.int8)) + _int_mm(a2, g(bi).astype(jnp.int8))
-        s = _swap_mask(bi, swap).astype(jnp.int32)
-        b1 = (s * f(bi)).astype(jnp.int8)
-        b2 = ((1 - s) * g(bi)).astype(jnp.int8)
-        return _int_mm(g(ai).astype(jnp.int8), b1) + _int_mm(f(ai).astype(jnp.int8), b2)
+        return _stacked_mm(*_mxu_limbs(ai, bi, f, g, swap))
     if policy.backend == "kernel":
         from repro.kernels import ax_matmul as kernel_mm
 
@@ -166,6 +209,22 @@ def ax_matmul_int(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
     return ax_matmul_ref(a2d, b_i8, mult, swap).reshape(*lead, b_i8.shape[-1])
 
 
+def ax_matmul_int_2mm(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
+    """The pre-K-stacking 2-matmul mxu factorization, retained as the
+    bit-identity oracle and the old-path benchmark baseline (see
+    ``benchmarks/perf_table.py``).  mxu backend only."""
+    assert policy.backend == "mxu", policy.backend
+    sep = separable_transforms(policy.mult_name)
+    assert sep is not None, f"{policy.mult_name} is not separable"
+    f, g = sep
+    ai = a_i8.astype(jnp.int32)
+    bi = b_i8.astype(jnp.int32)
+    if policy.swap is None:
+        return _int_mm(f(ai).astype(jnp.int8), g(bi).astype(jnp.int8))
+    x1, y1, x2, y2 = _mxu_limbs(ai, bi, f, g, policy.swap)
+    return _int_mm(x1, y1) + _int_mm(x2, y2)
+
+
 # ---------------------------------------------------------------------------
 # dynamic-config variants (the adaptive-runtime zero-recompile path)
 # ---------------------------------------------------------------------------
@@ -175,16 +234,11 @@ def ax_matmul_int_dyn(a_i8, b_i8, policy: AxPolicy, dyn) -> jax.Array:
     value) int32 triple, so the adaptive controller can re-tune a serving
     step without recompiling it (value=2 encodes NoSwap).
 
-    The mxu backend keeps the 2-int8-matmul closed form of the static path:
-    with row mask sa (decision on A) and column mask sb (decision on B), each
-    gated by op_is_a, the operand-side selects
-
-        X1 = op_is_a ? sa.g(A) : g(A)      Y1 = op_is_a ? f(B) : sb.f(B)
-        X2 = op_is_a ? (1-sa).f(A) : f(A)  Y2 = op_is_a ? g(B) : (1-sb).g(B)
-
-    make ``X1 @ Y1 + X2 @ Y2`` equal the A-form or B-form factorization of
-    the static path for every triple — bit-identical, still MXU-rate.
-    """
+    The mxu backend dispatches the factorization limbs of ``_mxu_limbs_dyn``
+    as one K-stacked int8 matmul — bit-identical to the static path for
+    every triple, still MXU-rate, and exactly one ``dot_general`` in the
+    compiled step regardless of the traced config (NoSwap rides the same
+    program with a zeroed limb)."""
     mult = M.get(policy.mult_name)
     op_is_a, bit, value = dyn[0], dyn[1], dyn[2]
     if policy.backend == "mxu":
@@ -193,14 +247,7 @@ def ax_matmul_int_dyn(a_i8, b_i8, policy: AxPolicy, dyn) -> jax.Array:
         f, g = sep
         ai = a_i8.astype(jnp.int32)
         bi = b_i8.astype(jnp.int32)
-        is_a = op_is_a == 1
-        sa = ((((ai >> bit) & 1) == value) & is_a).astype(jnp.int32)
-        sb = ((((bi >> bit) & 1) == value) & ~is_a).astype(jnp.int32)
-        x1 = jnp.where(is_a, sa * g(ai), g(ai)).astype(jnp.int8)
-        y1 = jnp.where(is_a, f(bi), sb * f(bi)).astype(jnp.int8)
-        x2 = jnp.where(is_a, (1 - sa) * f(ai), f(ai)).astype(jnp.int8)
-        y2 = jnp.where(is_a, g(bi), (1 - sb) * g(bi)).astype(jnp.int8)
-        return _int_mm(x1, y1) + _int_mm(x2, y2)
+        return _stacked_mm(*_mxu_limbs_dyn(ai, bi, f, g, op_is_a, bit, value))
     if policy.backend == "kernel":
         from repro.kernels import ax_matmul_grid
 
@@ -215,6 +262,19 @@ def ax_matmul_int_dyn(a_i8, b_i8, policy: AxPolicy, dyn) -> jax.Array:
     B = b_i8.astype(jnp.int32)[None, :, :]
     prod = apply_swapper_dyn(mult, A, B, op_is_a, bit, value).astype(jnp.int32)
     return jnp.sum(prod, axis=1, dtype=jnp.int32).reshape(*lead, b_i8.shape[-1])
+
+
+def ax_matmul_int_dyn_2mm(a_i8, b_i8, policy: AxPolicy, dyn) -> jax.Array:
+    """The pre-K-stacking 2-matmul dynamic mxu path (bit-identity oracle /
+    benchmark baseline).  mxu backend only."""
+    assert policy.backend == "mxu", policy.backend
+    sep = separable_transforms(policy.mult_name)
+    assert sep is not None, f"{policy.mult_name} is not separable"
+    f, g = sep
+    ai = a_i8.astype(jnp.int32)
+    bi = b_i8.astype(jnp.int32)
+    x1, y1, x2, y2 = _mxu_limbs_dyn(ai, bi, f, g, dyn[0], dyn[1], dyn[2])
+    return _int_mm(x1, y1) + _int_mm(x2, y2)
 
 
 # ---------------------------------------------------------------------------
@@ -252,26 +312,32 @@ ax_dense.defvjp(_ax_dense_fwd, _ax_dense_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _ax_dense_dyn_core(x, w, policy: AxPolicy, dyn):
-    return _ax_dense_dyn_impl(x, w, policy, dyn)
+def _ax_dense_dyn_core(x, w, policy: AxPolicy, dyn, xq, sx, wq, sw):
+    """Dequantized dynamic approximate matmul over *pre-quantized* operands.
 
-
-def _ax_dense_dyn_impl(x, w, policy, dyn):
-    xq, sx = quantize_rows(x.astype(jnp.float32), axis=-1)
-    wq, sw = quantize_rows(w.astype(jnp.float32), axis=0)
+    The quantization is hoisted into :func:`ax_dense_dyn` so the telemetry
+    tap and the matmul share one set of ``quantize_rows`` results explicitly
+    (the summary's tracers must belong to the outer trace to leave the jitted
+    step, so it cannot live inside this custom_vjp boundary).  ``x``/``w``
+    ride along as the straight-through gradient residuals."""
     acc = ax_matmul_int_dyn(xq, wq, policy, dyn)
     return (acc.astype(jnp.float32) * sx * sw).astype(x.dtype)
 
 
-def _ax_dense_dyn_fwd(x, w, policy, dyn):
-    return _ax_dense_dyn_impl(x, w, policy, dyn), (x, w)
+def _ax_dense_dyn_fwd(x, w, policy, dyn, xq, sx, wq, sw):
+    return _ax_dense_dyn_core(x, w, policy, dyn, xq, sx, wq, sw), (x, w)
 
 
 def _ax_dense_dyn_bwd(policy, res, gy):
     x, w = res
     gx, gw = _ax_dense_bwd(policy, res, gy)
-    # integer config triple: symbolic-zero (float0) cotangent
-    return gx, gw, np.zeros((3,), dtype=jax.dtypes.float0)
+    # integer inputs (config triple, int8 operands): symbolic-zero (float0)
+    # cotangents; the f32 quantization scales get literal zeros (STE ignores
+    # the quantization path entirely)
+    f0 = jax.dtypes.float0
+    return (gx, gw, np.zeros((3,), f0),
+            np.zeros(x.shape, f0), jnp.zeros(x.shape[:-1] + (1,), jnp.float32),
+            np.zeros(w.shape, f0), jnp.zeros((1, w.shape[-1]), jnp.float32))
 
 
 _ax_dense_dyn_core.defvjp(_ax_dense_dyn_fwd, _ax_dense_dyn_bwd)
@@ -280,13 +346,15 @@ _ax_dense_dyn_core.defvjp(_ax_dense_dyn_fwd, _ax_dense_dyn_bwd)
 def ax_dense_dyn(x, w, policy: AxPolicy, dyn, scope=None, target: str = ""):
     """``ax_dense`` with a traced swap triple (adaptive runtime path); when a
     collecting scope is open, also emits the telemetry record for this call.
-    The summary is computed outside the custom_vjp boundary (its tracers must
-    belong to the outer trace to be returned from the jitted step); XLA CSE
-    merges the duplicated quantization."""
+    ``quantize_rows`` runs once here and its results feed both the telemetry
+    summary and the matmul core explicitly (no reliance on XLA CSE).  The
+    scope's traced observe gate (if any) lets off-steps skip the summary
+    compute entirely (``lax.cond``) while keeping the record shapes static."""
+    xq, sx = quantize_rows(x.astype(jnp.float32), axis=-1)
+    wq, sw = quantize_rows(w.astype(jnp.float32), axis=0)
     if scope is not None and scope.collect:
         from repro.runtime.telemetry import operand_summary
 
-        xq, _ = quantize_rows(x.astype(jnp.float32), axis=-1)
-        wq, _ = quantize_rows(w.astype(jnp.float32), axis=0)
-        scope.record(target, operand_summary(xq, wq, M.get(policy.mult_name), dyn))
-    return _ax_dense_dyn_core(x, w, policy, dyn)
+        scope.record(target, operand_summary(xq, wq, M.get(policy.mult_name),
+                                             dyn, gate=scope.gate))
+    return _ax_dense_dyn_core(x, w, policy, dyn, xq, sx, wq, sw)

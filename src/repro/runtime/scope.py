@@ -41,11 +41,19 @@ def fallback_chain(key: str) -> List[str]:
 
 class AxRuntimeScope:
     """Holds the traced (op_is_a, bit, value) triples for the current step and
-    collects per-target telemetry summaries emitted during tracing."""
+    collects per-target telemetry summaries emitted during tracing.
 
-    def __init__(self, dyn_tree: Optional[Dict[str, jax.Array]], collect: bool = False):
+    ``gate`` — optional *traced* boolean scalar implementing telemetry
+    decimation: when False at runtime, every summary in the step is replaced
+    by a ``lax.cond`` branch of zeros, so off-steps skip the summary compute
+    entirely while the compiled program (and the record pytree structure)
+    stays identical.  None means always-on (the pre-decimation behavior)."""
+
+    def __init__(self, dyn_tree: Optional[Dict[str, jax.Array]], collect: bool = False,
+                 gate: Optional[jax.Array] = None):
         self.dyn = dict(dyn_tree or {})
         self.collect = collect
+        self.gate = gate
         self._records: Dict[str, List[dict]] = {}
 
     def triple_for(self, target: str) -> Optional[jax.Array]:
@@ -78,11 +86,14 @@ def active_scope() -> Optional[AxRuntimeScope]:
 
 
 @contextlib.contextmanager
-def ax_scope(dyn_tree: Optional[Dict[str, jax.Array]], collect: bool = False):
-    """Open a dynamic-policy scope (used inside the function being jitted)."""
+def ax_scope(dyn_tree: Optional[Dict[str, jax.Array]], collect: bool = False,
+             gate: Optional[jax.Array] = None):
+    """Open a dynamic-policy scope (used inside the function being jitted).
+    ``gate`` is an optional traced observe-every-k boolean: False-at-runtime
+    steps skip the telemetry summary compute (see :class:`AxRuntimeScope`)."""
     global _ACTIVE
     prev = _ACTIVE
-    _ACTIVE = AxRuntimeScope(dyn_tree, collect=collect)
+    _ACTIVE = AxRuntimeScope(dyn_tree, collect=collect, gate=gate)
     try:
         yield _ACTIVE
     finally:

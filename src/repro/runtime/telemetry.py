@@ -61,13 +61,27 @@ def _bit_counts(v_i32, bits: int):
     return jnp.sum((mag[:, None] >> shifts) & 1, axis=0).astype(jnp.float32)
 
 
-def operand_summary(xq, wq, mult: AxMult, dyn) -> dict:
+def operand_summary(xq, wq, mult: AxMult, dyn, gate=None) -> dict:
     """Fixed-shape telemetry record for one approximate projection call.
 
     ``xq``/``wq`` are the quantized integer operands, ``dyn`` the traced
     (op_is_a, bit, value) triple currently applied.  All outputs are scalars
     or small vectors so the host transfer stays negligible.
+
+    ``gate`` — optional traced boolean scalar (telemetry decimation): when
+    False at runtime the whole summary compute is skipped via ``lax.cond``
+    and an all-zero record of identical structure is produced instead.  The
+    host only observes gated-on steps, so the zeros never reach the
+    accumulators.
     """
+    if gate is not None:
+        import jax
+
+        impl = lambda: operand_summary(xq, wq, mult, dyn)
+        shapes = jax.eval_shape(impl)
+        zeros = lambda: jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        return jax.lax.cond(gate, impl, zeros)
     bits = mult.bits
     a = _flat_sample(xq, TELEMETRY_SAMPLE).astype(jnp.int32)
     b = _flat_sample(wq, TELEMETRY_SAMPLE).astype(jnp.int32)

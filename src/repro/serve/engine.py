@@ -1,15 +1,27 @@
 """Batched serving loop: prefill once, then greedy/temperature decode steps
 against the sharded KV cache.
 
+The non-adaptive hot path is **fully fused on device**: the whole token loop
+(decode step + sampling + cache update) runs as one ``lax.scan``, so serving
+``T`` tokens costs one dispatch instead of ``T`` host round-trips.  The
+Python step loop is kept (``ServeConfig.fused=False``, or automatically when
+a ``param_hook`` needs to mutate params mid-generation) and produces
+bit-identical token sequences — the scan body performs the exact same ops in
+the same order, including the RNG splits.
+
 With an :class:`~repro.runtime.AdaptiveController` attached, the decode step
 is compiled **once** with the SWAPPER config as a traced input and telemetry
 summaries as extra outputs; each step the controller folds the telemetry in,
 scores distribution drift, and re-tunes the policy in place — the jit cache
-stays warm throughout (zero recompilations; see runtime/).
+stays warm throughout (zero recompilations; see runtime/).  Telemetry is
+decimated by ``ServeConfig.observe_every``: the observe gate enters the
+compiled step as a traced boolean, so off-steps skip the summary compute
+(``lax.cond``) *and* the host-side device_get without retracing anything.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
@@ -26,6 +38,18 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0   # 0 => greedy
     seed: int = 0
+    fused: bool = True         # on-device lax.scan decode (non-adaptive path)
+    observe_every: int = 1     # adaptive telemetry decimation period (k >= 1)
+
+
+def _sampler(scfg: ServeConfig):
+    def sample(logits, key):
+        lg = logits[:, -1].astype(jnp.float32)
+        if scfg.temperature > 0:
+            return jax.random.categorical(key, lg / scfg.temperature, axis=-1)
+        return jnp.argmax(lg, axis=-1)
+
+    return sample
 
 
 def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
@@ -38,7 +62,8 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
     policy for ``cfg.ax.targets`` projections during decode.
     ``param_hook(step, params) -> params`` — optional per-step parameter
     transform (used by the serve driver to inject synthetic distribution
-    drift; values change, shapes don't, so the step is not retraced).
+    drift; values change, shapes don't, so the step is not retraced).  A hook
+    forces the stepwise Python loop (params must change between steps).
     """
     S = (prompt_batch["tokens"].shape[1] if "tokens" in prompt_batch
          else prompt_batch["embeds"].shape[1])
@@ -47,14 +72,55 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
 
     logits, cache = prefill(params, prompt_batch, cfg, par, max_cache_len=max_len)
     key = jax.random.PRNGKey(scfg.seed)
-
-    def sample(logits, key):
-        lg = logits[:, -1].astype(jnp.float32)
-        if scfg.temperature > 0:
-            return jax.random.categorical(key, lg / scfg.temperature, axis=-1)
-        return jnp.argmax(lg, axis=-1)
-
+    sample = _sampler(scfg)
     tok = sample(logits, key)
+
+    if adaptive is None and param_hook is None and scfg.fused:
+        return _generate_fused(params, cache, tok, key, S, cfg, scfg, par)
+    return _generate_stepwise(params, cache, tok, key, S, cfg, scfg, par,
+                              adaptive, param_hook)
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_decode_fn(cfg, par, n_steps: int, temperature: float):
+    """Build (and cache) the jitted whole-loop decode scan.  Keyed on the
+    hashable configs so repeated ``generate`` calls reuse the compiled
+    program; the prompt length enters as a traced ``start`` index, so prompt
+    shape changes retrace only via ``prefill``/cache shapes."""
+    scfg = ServeConfig(temperature=temperature)
+    sample = _sampler(scfg)
+
+    @jax.jit
+    def decode_scan(params, cache, tok0, key0, start):
+        def step(carry, i):
+            tok, cache, key = carry
+            key, sub = jax.random.split(key)
+            logits, cache = decode_step(params, cache, tok[:, None],
+                                        start + i, cfg, par)
+            tok = sample(logits, sub)
+            return (tok, cache, key), tok
+
+        (_, _, _), toks = jax.lax.scan(
+            step, (tok0, cache, key0), jnp.arange(n_steps, dtype=jnp.int32))
+        return toks                                   # (n_steps, B)
+
+    return decode_scan
+
+
+def _generate_fused(params, cache, tok, key, S, cfg, scfg: ServeConfig, par):
+    """The whole decode loop (step + sample) as one on-device ``lax.scan``."""
+    n_steps = scfg.max_new_tokens - 1
+    if n_steps <= 0:
+        return tok[:, None]
+    decode_scan = _fused_decode_fn(cfg, par, n_steps, scfg.temperature)
+    toks = decode_scan(params, cache, tok, key, jnp.int32(S))
+    return jnp.concatenate([tok[:, None], jnp.swapaxes(toks, 0, 1)], axis=1)
+
+
+def _generate_stepwise(params, cache, tok, key, S, cfg, scfg: ServeConfig, par,
+                       adaptive, param_hook):
+    """One host-dispatched decode step per token: the adaptive/telemetry path
+    and the ``param_hook`` path (also the fused path's correctness oracle)."""
     out = [tok]
 
     if adaptive is None:
@@ -69,13 +135,15 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
         # follow-on.
         dec_par = dataclasses.replace(par or ParallelConfig(), scan_layers=False)
 
-        def _adaptive_step(p, c, t, i, dyn):
-            with ax_scope(dyn, collect=True) as sc:
+        def _adaptive_step(p, c, t, i, dyn, gate):
+            with ax_scope(dyn, collect=True, gate=gate) as sc:
                 logits, new_cache = decode_step(p, c, t, i, cfg, dec_par)
                 return logits, new_cache, sc.collected()
 
         step_fn = jax.jit(_adaptive_step)
 
+    sample = _sampler(scfg)
+    k_obs = max(1, int(scfg.observe_every))
     pending = None   # one-step-stale observe: fetch step i-1's telemetry only
     for i in range(scfg.max_new_tokens - 1):   # after step i is dispatched, so
         key, sub = jax.random.split(key)       # async dispatch stays pipelined
@@ -84,12 +152,16 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
         if adaptive is None:
             logits, cache = step_fn(params, cache, tok[:, None], jnp.int32(S + i))
         else:
+            gate = (i % k_obs == 0)
             logits, cache, telem = step_fn(
-                params, cache, tok[:, None], jnp.int32(S + i), adaptive.dyn_tree()
+                params, cache, tok[:, None], jnp.int32(S + i),
+                adaptive.dyn_tree(), jnp.bool_(gate)
             )
             if pending is not None:
                 adaptive.observe(jax.device_get(pending))
-            pending = telem
+                pending = None
+            if gate:       # off-steps produced zero records (lax.cond) —
+                pending = telem   # never surface them to the controller
         tok = sample(logits, sub)
         out.append(tok)
     if pending is not None:

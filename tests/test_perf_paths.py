@@ -1,0 +1,227 @@
+"""PR-2 hot-path invariants: the K-stacked single-matmul mxu factorization is
+bit-identical to the legacy 2-matmul form (every bit x value x operand, static
+and dynamic), compiles to exactly one int8 dot_general, the slab-vectorized
+Pallas reduction matches the oracle at every slab depth, and the fused
+``lax.scan`` decode reproduces the Python-loop token sequence exactly."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.kernels as K
+from repro.configs.base import AxPolicy
+from repro.quant.ax import (
+    ax_matmul_int,
+    ax_matmul_int_2mm,
+    ax_matmul_int_dyn,
+    ax_matmul_int_dyn_2mm,
+)
+
+
+def _ops(shape, seed, dtype=np.int8, lo=-128, hi=128):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, shape).astype(dtype))
+
+
+def _all_cfgs(bits=8):
+    return [None] + C.all_configs(bits)
+
+
+# ---------------------------------------------------------------------------
+# K-stacked mxu path == 2-matmul form, exhaustively over the config space
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mname", ["mul8s_trunc0_4", "mul8s_perf0_1"])
+def test_stacked_static_bit_identity_all_configs(mname):
+    a = _ops((16, 32), 0)
+    b = _ops((32, 24), 1)
+    for cfg in _all_cfgs():
+        if cfg is None:
+            pol = AxPolicy(mult_name=mname, backend="mxu", swap_enabled=False)
+        else:
+            pol = AxPolicy(mult_name=mname, backend="mxu", swap_operand=cfg.operand,
+                           swap_bit=cfg.bit, swap_value=cfg.value)
+        got = np.asarray(ax_matmul_int(a, b, pol))
+        ref = np.asarray(ax_matmul_int_2mm(a, b, pol))
+        assert np.array_equal(got, ref), cfg
+        # cross-check one backend-independent oracle per operand side
+        if cfg is not None and cfg.bit == 3:
+            emul = np.asarray(ax_matmul_int(
+                a, b, dataclasses.replace(pol, backend="emul")))
+            assert np.array_equal(got, emul), cfg
+
+
+@pytest.mark.parametrize("mname", ["mul8s_trunc0_4", "mul8s_perf0_1"])
+def test_stacked_dyn_bit_identity_all_triples(mname):
+    from repro.runtime import all_triples
+
+    a = _ops((16, 32), 2)
+    b = _ops((32, 24), 3)
+    pol = AxPolicy(mult_name=mname, backend="mxu")
+    for triple in np.asarray(all_triples(8)):       # NoSwap + all 4M configs
+        dyn = jnp.asarray(triple, jnp.int32)
+        got = np.asarray(ax_matmul_int_dyn(a, b, pol, dyn))
+        ref = np.asarray(ax_matmul_int_dyn_2mm(a, b, pol, dyn))
+        assert np.array_equal(got, ref), triple
+
+
+def test_stacked_dyn_matches_static_every_config():
+    """dyn triple == static config through the NEW stacked path end to end."""
+    from repro.core.swapper import cfg_to_triple
+
+    a = _ops((8, 64), 4)
+    b = _ops((64, 16), 5)
+    for cfg in _all_cfgs():
+        if cfg is None:
+            pol = AxPolicy(backend="mxu", swap_enabled=False)
+        else:
+            pol = AxPolicy(backend="mxu", swap_operand=cfg.operand,
+                           swap_bit=cfg.bit, swap_value=cfg.value)
+        dyn = jnp.asarray(cfg_to_triple(cfg), jnp.int32)
+        assert np.array_equal(
+            np.asarray(ax_matmul_int(a, b, pol)),
+            np.asarray(ax_matmul_int_dyn(a, b, AxPolicy(backend="mxu"), dyn))
+        ), cfg
+
+
+def _count_dot_generals(fn, *args):
+    # one jaxpr-walking counter for tests and benchmarks (keep in sync once)
+    from benchmarks.perf_table import count_primitive
+
+    return count_primitive(fn, *args, primitive="dot_general")
+
+
+def test_stacked_path_dispatches_single_matmul():
+    """Acceptance criterion: one int8 dot_general per projection (was two)."""
+    a = _ops((32, 32), 6)
+    b = _ops((32, 32), 7)
+    pol = AxPolicy(backend="mxu")                      # swap enabled
+    dyn = jnp.asarray((1, 3, 0), jnp.int32)
+    assert _count_dot_generals(lambda a, b: ax_matmul_int(a, b, pol), a, b) == 1
+    assert _count_dot_generals(
+        lambda a, b, d: ax_matmul_int_dyn(a, b, pol, d), a, b, dyn) == 1
+    # the retained legacy forms really are the 2-matmul baselines
+    assert _count_dot_generals(lambda a, b: ax_matmul_int_2mm(a, b, pol), a, b) == 2
+    assert _count_dot_generals(
+        lambda a, b, d: ax_matmul_int_dyn_2mm(a, b, pol, d), a, b, dyn) == 2
+
+
+# ---------------------------------------------------------------------------
+# slab-vectorized Pallas reduction == oracle at every slab depth
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k_slab", [1, 2, 4, 8])
+def test_kernel_slab_depths_match_oracle(k_slab):
+    a = _ops((32, 64), 8)
+    b = _ops((64, 32), 9)
+    m = C.get("mul8s_drum3_4")
+    swap = C.SwapConfig("B", 2, 0)
+    got = K.ax_matmul(a, b, m, swap, block_m=32, block_n=32, block_k=16,
+                      k_slab=k_slab)
+    ref = K.ax_matmul_ref(a, b, m, swap)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_grid_kernel_slab_depths_match_oracle():
+    rng = np.random.default_rng(10)
+    a = _ops((64, 32), 11)
+    b = _ops((32, 64), 12)
+    m = C.get("mul8s_trunc0_4")
+    grid = jnp.asarray(np.stack([
+        rng.integers(0, 2, (2, 2)), rng.integers(0, 8, (2, 2)),
+        rng.integers(0, 3, (2, 2)),
+    ], axis=-1), jnp.int32)
+    ref = K.ax_matmul_grid_ref(a, b, m, grid)
+    for ks in (1, 4, 8):
+        got = K.ax_matmul_grid(a, b, m, grid, block_m=32, block_n=32,
+                               block_k=16, k_slab=ks)
+        assert np.array_equal(np.asarray(got), np.asarray(ref)), ks
+
+
+def test_kernel_slab_handles_nondividing_depth():
+    """k_slab falls back to the largest divisor of bk."""
+    a = _ops((8, 24), 13)
+    b = _ops((24, 8), 14)
+    m = C.get("mul8s_trunc0_4")
+    got = K.ax_matmul(a, b, m, C.SwapConfig("A", 5, 1), block_m=8, block_n=8,
+                      block_k=24, k_slab=8)           # 8 does not divide 24
+    ref = K.ax_matmul_ref(a, b, m, C.SwapConfig("A", 5, 1))
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# fused lax.scan decode == Python-loop decode
+# ---------------------------------------------------------------------------
+
+def _tiny_model():
+    import repro.configs as CFG
+    from repro.models import init_params
+
+    cfg = CFG.reduced(CFG.ARCHS["qwen2-72b"])
+    cfg = dataclasses.replace(cfg, n_layers=2, ax=AxPolicy(backend="mxu"))
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_scan_decode_matches_python_loop(temperature):
+    from repro.serve import ServeConfig, generate
+
+    cfg, params = _tiny_model()
+    rng = np.random.default_rng(0)
+    prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)}
+    kw = dict(max_new_tokens=7, temperature=temperature)
+    o_loop = generate(params, prompt, cfg, ServeConfig(fused=False, **kw))
+    o_scan = generate(params, prompt, cfg, ServeConfig(fused=True, **kw))
+    assert o_scan.shape == (2, 7)
+    assert np.array_equal(np.asarray(o_loop), np.asarray(o_scan))
+
+
+def test_telemetry_decimation_gates_summary():
+    """observe_every=k: only every k-th step's records reach the controller,
+    and the gated-off summaries are lax.cond-skipped zeros in-graph."""
+    import repro.runtime as R
+    from repro.serve import ServeConfig, generate
+
+    cfg, params = _tiny_model()
+    rng = np.random.default_rng(1)
+    prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)}
+
+    def run(k):
+        policy = R.SwapPolicy.from_ax_policy(cfg.ax)
+        ctrl = R.AdaptiveController(policy, targets=cfg.ax.targets,
+                                    cfg=R.AdaptiveConfig(min_observe_steps=10**6))
+        out = generate(params, prompt, cfg,
+                       ServeConfig(max_new_tokens=10, observe_every=k),
+                       adaptive=ctrl)
+        assert out.shape == (2, 10)
+        return {t: s["n_steps"] for t, s in ctrl.telemetry.snapshot().items()}
+
+    full, dec = run(1), run(3)
+    for t in full:
+        assert full[t] == 9          # every decode step observed
+        assert dec[t] == 3           # steps 0, 3, 6 only
+
+
+def test_gated_summary_is_zero_and_ungated_matches():
+    """The traced gate switches between the real record and all-zeros without
+    changing shapes/dtypes (one compiled program serves both)."""
+    import repro.runtime as R
+
+    mult = C.get("mul8u_trunc0_4")
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 256, R.TELEMETRY_SAMPLE), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, R.TELEMETRY_SAMPLE), jnp.int32)
+    dyn = jnp.asarray(R.NO_SWAP_TRIPLE, jnp.int32)
+
+    f = jax.jit(lambda gate: R.operand_summary(a, b, mult, dyn, gate=gate))
+    on = jax.device_get(f(jnp.bool_(True)))
+    off = jax.device_get(f(jnp.bool_(False)))
+    ref = jax.device_get(R.operand_summary(a, b, mult, dyn))
+    assert f._cache_size() == 1
+    for k in ref:
+        assert np.array_equal(on[k], ref[k]), k
+        assert not np.any(off[k]), k
+        assert off[k].dtype == ref[k].dtype and off[k].shape == ref[k].shape, k
