@@ -1,0 +1,234 @@
+"""Fleet-serving table: the adaptive hot path at one-dispatch-per-generation
+plus the continuous-batching scheduler and the policy store.
+
+Three sections (single-process; the multi-device psum path is exercised by
+tests/test_fleet.py and examples/fleet_serve.py under forced host devices):
+
+* **adaptive decode** — the stepwise adaptive loop (one host dispatch per
+  token, the PR-1 design) vs the fused telemetry-through-scan-carry decode
+  (ONE dispatch per generation): wall steps/s, token bit-identity, telemetry
+  bit-identity, and the zero-retrace check across a policy update.
+* **scheduler** — variable-length synthetic requests through the
+  ``ContinuousBatcher``: requests/s, slot utilization, waves, and compiled
+  shape classes (one per prompt bucket).
+* **policy store** — publish/load round-trip wall time and version
+  monotonicity.
+
+``run()``'s deterministic counters (dispatches per generation, identity
+flags, retrace-freedom) feed the ``benchmarks.regress`` CI gate via the
+``fleet`` section of BENCH_3.json.
+
+    PYTHONPATH=src python -m benchmarks.fleet_table [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AxPolicy
+
+MULT = "mul8s_trunc0_4"
+
+
+def _tiny():
+    import repro.configs as CFG
+    from repro.models import init_params
+
+    cfg = CFG.reduced(CFG.ARCHS["qwen2-72b"])
+    cfg = dataclasses.replace(cfg, n_layers=2,
+                              ax=AxPolicy(mult_name=MULT, backend="mxu"))
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _controller(cfg, store=None):
+    import repro.runtime as R
+
+    return R.AdaptiveController(
+        R.SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
+        cfg=R.AdaptiveConfig(min_observe_steps=10 ** 6), store=store)
+
+
+def _snap_equal(a, b) -> bool:
+    if set(a) != set(b):
+        return False
+    for t in a:
+        for f in ("mae", "wce", "ep", "n", "n_steps"):
+            if a[t][f] != b[t][f]:
+                return False
+        if not np.array_equal(a[t]["bit_probs"], b[t]["bit_probs"]):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# 1. adaptive decode: stepwise loop vs fused scan
+# ---------------------------------------------------------------------------
+
+def bench_adaptive_decode(quick: bool):
+    import repro.core as C
+    from repro.serve import ServeConfig, generate
+    from repro.serve import engine as E
+
+    cfg, params = _tiny()
+    T = 12 if quick else 24
+    rng = np.random.default_rng(0)
+    prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+
+    out = {"new_tokens": T,
+           # by construction: the stepwise loop issues one jitted decode-step
+           # call per generated token; the fused path runs the whole loop as
+           # one lax.scan inside one jitted call
+           "stepwise_dispatch_per_gen": T - 1,
+           "fused_dispatch_per_gen": 1}
+    toks, snaps = {}, {}
+    for name, fused in (("stepwise", False), ("fused", True)):
+        ctrl = _controller(cfg)
+        scfg = ServeConfig(max_new_tokens=T, fused=fused)
+        toks[name] = np.asarray(
+            generate(params, prompt, cfg, scfg, adaptive=ctrl))   # compile
+        snaps[name] = ctrl.telemetry.snapshot()
+        best = float("inf")
+        for _ in range(2 if quick else 3):
+            c2 = _controller(cfg)
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                generate(params, prompt, cfg, scfg, adaptive=c2))
+            best = min(best, time.perf_counter() - t0)
+        out[f"{name}_steps_per_s"] = (T - 1) / best
+    out["bit_identical"] = bool(np.array_equal(toks["stepwise"], toks["fused"]))
+    out["telemetry_identical"] = _snap_equal(snaps["stepwise"], snaps["fused"])
+    out["speedup"] = out["fused_steps_per_s"] / out["stepwise_steps_per_s"]
+
+    # zero-retrace across a re-tune: flip the policy, regenerate, and check
+    # the fused program cache kept exactly one entry per shape class
+    ctrl = _controller(cfg)
+    scfg = ServeConfig(max_new_tokens=T, fused=True)
+    generate(params, prompt, cfg, scfg, adaptive=ctrl)
+    ctrl.policy.set_config("mlp", C.SwapConfig("B", 5, 1))
+    generate(params, prompt, cfg, scfg, adaptive=ctrl)
+    sizes = [f._cache_size() for f in E._ADAPTIVE_FNS.values()]
+    out["retrace_free"] = bool(all(s == 1 for s in sizes))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 2. continuous-batching scheduler
+# ---------------------------------------------------------------------------
+
+def bench_scheduler(quick: bool):
+    from repro.fleet import BatcherConfig, ContinuousBatcher, Request
+
+    cfg, params = _tiny()
+    n_req = 8 if quick else 16
+    bcfg = BatcherConfig(n_slots=4, prompt_buckets=(8, 16), new_token_bucket=8)
+    bat = ContinuousBatcher(params, cfg, bcfg, adaptive=_controller(cfg))
+    rng = np.random.default_rng(1)
+    for rid in range(n_req):
+        L = int(rng.integers(4, 17))
+        bat.submit(Request(rid, rng.integers(0, cfg.vocab, L),
+                           max_new=int(rng.integers(1, 9))))
+    t0 = time.perf_counter()
+    done = bat.run()
+    dt = time.perf_counter() - t0
+    s = bat.stats
+    useful = s["real_tokens"]
+    total = useful + s["padded_tokens"] + s["filler_tokens"]
+    return {
+        "requests": len(done),
+        "waves": s["waves"],
+        "requests_per_s": len(done) / dt,
+        "slot_utilization": useful / total if total else 1.0,
+        "all_served": len(done) == n_req,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. policy store
+# ---------------------------------------------------------------------------
+
+def bench_store(quick: bool):
+    import repro.runtime as R
+    from repro.fleet import PolicyReader, PolicyStore
+
+    n = 16 if quick else 64
+    with tempfile.TemporaryDirectory() as tmp:
+        store = PolicyStore(tmp)
+        policy = R.SwapPolicy(MULT, configs={"*": None})
+        t0 = time.perf_counter()
+        import repro.core as C
+
+        for i in range(n):
+            policy.set_config("mlp", C.SwapConfig("A", i % 8, i % 2))
+            store.publish(policy)
+        publish_us = 1e6 * (time.perf_counter() - t0) / n
+        reader = PolicyReader(store, ("mlp",))
+        t0 = time.perf_counter()
+        reader.poll()                       # no-op poll (version unchanged)
+        poll_us = 1e6 * (time.perf_counter() - t0)
+        monotonic = store.versions() == sorted(store.versions())
+        current_ok = store.current_version() == n
+        adopted_ok = reader.policy.configs_equal(policy)
+    return {
+        "publishes": n,
+        "publish_us": publish_us,
+        "noop_poll_us": poll_us,
+        "versions_monotonic": bool(monotonic and current_ok),
+        "reader_adopted_latest": bool(adopted_ok),
+    }
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run(quick: bool = False):
+    return {
+        "bench": "fleet_table",
+        "quick": quick,
+        "adaptive_decode": bench_adaptive_decode(quick),
+        "scheduler": bench_scheduler(quick),
+        "store": bench_store(quick),
+    }
+
+
+def format_table(out) -> str:
+    a, s, st = out["adaptive_decode"], out["scheduler"], out["store"]
+    lines = [
+        "Fleet serving — adaptive decode, scheduler, policy store (PR 3)",
+        f"{'path':38s} {'old':>10s} {'new':>10s} {'gain':>8s}",
+        (f"{'adaptive dispatches/generation':38s} "
+         f"{a['stepwise_dispatch_per_gen']:>10d} "
+         f"{a['fused_dispatch_per_gen']:>10d} "
+         f"{a['stepwise_dispatch_per_gen'] / a['fused_dispatch_per_gen']:>7.0f}x"),
+        (f"{'adaptive decode steps/s*':38s} {a['stepwise_steps_per_s']:>10.1f} "
+         f"{a['fused_steps_per_s']:>10.1f} {a['speedup']:>7.2f}x"),
+        f"adaptive fused bit-identical tokens:    {a['bit_identical']}",
+        f"adaptive fused bit-identical telemetry: {a['telemetry_identical']}",
+        f"policy update retrace-free:             {a['retrace_free']}",
+        (f"scheduler: {s['requests']} requests in {s['waves']} waves, "
+         f"{s['requests_per_s']:.2f} req/s*, slot utilization "
+         f"{100 * s['slot_utilization']:.0f}%"),
+        (f"store: publish {st['publish_us']:.0f}us*, no-op poll "
+         f"{st['noop_poll_us']:.0f}us*, monotonic={st['versions_monotonic']}, "
+         f"reader adopted latest={st['reader_adopted_latest']}"),
+        "  (* CPU wall in this container; dispatch counts and identity flags"
+        " are the gate metrics)",
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print(format_table(run(quick=args.quick)))
+
+
+if __name__ == "__main__":
+    main()

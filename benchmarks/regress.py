@@ -1,0 +1,82 @@
+"""CI perf-regression gate over the BENCH_*.json trajectory.
+
+Wall-clock on a shared CI host is noise; the *deterministic* counters are
+not: jaxpr ``dot_general`` dispatch counts, per-tile kernel reduction trip
+counts, bit-identity flags, and the fleet path's dispatches-per-generation
+are pure functions of the compiled programs.  ``check()`` compares the fresh
+artifact against the committed baseline and fails on any counter that got
+worse; wall-time movement is reported informationally only.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --check \
+        [--baseline benchmarks/baselines/BENCH_2.json]
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Tuple
+
+__all__ = ["RULES", "WALL_NOTES", "check", "check_files"]
+
+# (dotted path, rule): 'le' — new value must not exceed baseline;
+# 'true' — must be truthy in the new artifact.  Paths missing from either
+# side are skipped (older baselines predate newer sections).
+RULES = [
+    ("matmul_dispatch.static_stacked.dot_generals", "le"),
+    ("matmul_dispatch.dyn_stacked.dot_generals", "le"),
+    ("kernel_reduction.slab8_reduction_steps_per_tile", "le"),
+    ("decode.bit_identical", "true"),
+    ("fleet.adaptive_decode.fused_dispatch_per_gen", "le"),
+    ("fleet.adaptive_decode.bit_identical", "true"),
+    ("fleet.adaptive_decode.telemetry_identical", "true"),
+    ("fleet.adaptive_decode.retrace_free", "true"),
+]
+
+# informational wall-time trajectory (never gating)
+WALL_NOTES = [
+    "matmul_dispatch.static_stacked.us_per_call",
+    "matmul_dispatch.dyn_stacked.us_per_call",
+    "kernel_reduction.static_slab8_us",
+    "decode.scan_steps_per_s",
+]
+
+
+def _get(d, path: str):
+    for part in path.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def check(new: dict, baseline: dict) -> Tuple[List[str], List[str]]:
+    """(failures, notes): failures non-empty == perf regression."""
+    failures, notes = [], []
+    for path, rule in RULES:
+        nv = _get(new, path)
+        if rule == "true":
+            if nv is None:
+                continue
+            if not nv:
+                failures.append(f"{path}: expected truthy, got {nv!r}")
+            continue
+        bv = _get(baseline, path)
+        if nv is None or bv is None:
+            continue
+        if nv > bv:
+            failures.append(f"{path}: {bv} -> {nv} (regression)")
+        else:
+            notes.append(f"{path}: {bv} -> {nv} ok")
+    for path in WALL_NOTES:
+        nv, bv = _get(new, path), _get(baseline, path)
+        if nv is not None and bv is not None and bv:
+            notes.append(f"(wall, informational) {path}: {bv:.1f} -> {nv:.1f} "
+                         f"({nv / bv:.2f}x)")
+    return failures, notes
+
+
+def check_files(new_path: str, baseline_path: str) -> Tuple[List[str], List[str]]:
+    with open(new_path) as f:
+        new = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    return check(new, baseline)

@@ -1,11 +1,15 @@
 """Benchmark driver — one function per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--full]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--full] [--check]
 
 Prints each table and a ``name,us_per_call,derived`` CSV summary line per
 benchmark (derived = the table's headline number).  Also runs the hot-path
-perf microbenchmarks and writes ``BENCH_2.json`` (old-vs-new dispatch /
-reduction / decode numbers — the regression baseline for later PRs).
+perf microbenchmarks plus the fleet-serving microbenchmarks and writes
+``BENCH_3.json`` (dispatch / reduction / decode / fleet numbers — this PR's
+point on the perf trajectory).  ``--check`` then diffs the artifact's
+deterministic counters against the committed baseline
+(``benchmarks/baselines/BENCH_2.json``) and exits non-zero on regression —
+wall times are reported informationally only (see ``benchmarks.regress``).
 """
 from __future__ import annotations
 
@@ -13,16 +17,20 @@ import argparse
 import sys
 import time
 
-from . import (adaptive_table, app_table, component_table, hw_table,
-               perf_table, roofline_table)
+from . import (adaptive_table, app_table, component_table, fleet_table,
+               hw_table, perf_table, regress, roofline_table)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small fast subset")
     ap.add_argument("--full", action="store_true", help="all multipliers + ALL parts")
-    ap.add_argument("--bench-out", default="BENCH_2.json",
-                    help="perf_table JSON artifact path")
+    ap.add_argument("--bench-out", default="BENCH_3.json",
+                    help="perf/fleet JSON artifact path")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on deterministic-counter regression vs --baseline")
+    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_2.json",
+                    help="committed baseline artifact for --check")
     args = ap.parse_args()
 
     csv = ["name,us_per_call,derived"]
@@ -60,14 +68,26 @@ def main() -> None:
     t0 = time.time()
     perf = perf_table.run(quick=args.quick)
     print("\n" + perf_table.format_table(perf))
-    perf_table.write_json(perf, args.bench_out)
-    print(f"(perf_table written to {args.bench_out})")
     d = perf["matmul_dispatch"]
     csv.append(f"perf_table,{1e6*(time.time()-t0):.0f},"
                f"dispatch={d['static_2mm']['dot_generals']}->"
                f"{d['static_stacked']['dot_generals']}"
                f" reduction_steps_ratio={perf['kernel_reduction']['reduction_step_ratio']:.0f}x"
                f" decode_speedup={perf['decode']['speedup']:.2f}x")
+
+    t0 = time.time()
+    fleet = fleet_table.run(quick=args.quick)
+    print("\n" + fleet_table.format_table(fleet))
+    fa = fleet["adaptive_decode"]
+    csv.append(f"fleet_table,{1e6*(time.time()-t0):.0f},"
+               f"adaptive_dispatch={fa['stepwise_dispatch_per_gen']}->"
+               f"{fa['fused_dispatch_per_gen']}"
+               f" fused_speedup={fa['speedup']:.2f}x"
+               f" slot_util={100*fleet['scheduler']['slot_utilization']:.0f}%")
+
+    perf["fleet"] = fleet
+    perf_table.write_json(perf, args.bench_out)
+    print(f"(perf+fleet tables written to {args.bench_out})")
 
     t0 = time.time()
     hw = hw_table.run()
@@ -87,6 +107,17 @@ def main() -> None:
         print("\n(roofline: no dryrun_*.jsonl found — run repro.launch.dryrun --all)")
 
     print("\n" + "\n".join(csv))
+
+    if args.check:
+        failures, notes = regress.check_files(args.bench_out, args.baseline)
+        print(f"\nperf gate vs {args.baseline}:")
+        for line in notes:
+            print(f"  {line}")
+        if failures:
+            for line in failures:
+                print(f"  REGRESSION {line}")
+            sys.exit(1)
+        print("  gate: ok (no deterministic-counter regressions)")
 
 
 if __name__ == "__main__":

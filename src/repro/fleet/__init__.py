@@ -1,0 +1,39 @@
+"""Fleet-scale adaptive serving (DESIGN: shard -> aggregate -> publish).
+
+Makes the online adaptive SWAPPER runtime mesh-native:
+
+  collect   — in-graph cross-host telemetry aggregation: bit-occupancy and
+              limb-exact error sums ``psum`` over the mesh batch axes inside
+              the shard_map'd decode step, so ONE controller re-tunes from
+              the fleet-global operand distribution
+  store     — versioned ``PolicyStore``: single-writer / many-reader policy
+              JSON with monotonic versions and an atomic CURRENT pointer;
+              serve replicas and elastic restarts resume the *adapted*
+              policy, never the offline-tuned one
+  scheduler — continuous-batching ``ContinuousBatcher``: variable-length
+              requests admitted into fixed-shape decode slots, each wave one
+              fused adaptive ``lax.scan`` dispatch (telemetry threaded
+              through the scan carry; zero recompiles across waves, policy
+              updates, and reader syncs)
+"""
+from .collect import (
+    aggregate_records,
+    batch_axis_names,
+    make_sharded_summarizer,
+    shard_decode_specs,
+)
+from .scheduler import BatcherConfig, Completion, ContinuousBatcher, Request
+from .store import PolicyReader, PolicyStore
+
+__all__ = [
+    "aggregate_records",
+    "batch_axis_names",
+    "make_sharded_summarizer",
+    "shard_decode_specs",
+    "BatcherConfig",
+    "Completion",
+    "ContinuousBatcher",
+    "Request",
+    "PolicyReader",
+    "PolicyStore",
+]

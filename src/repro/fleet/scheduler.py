@@ -1,0 +1,193 @@
+"""Continuous-batching scheduler: variable-length requests -> fixed-shape
+decode slots -> one fused dispatch per wave.
+
+Serving traffic arrives as requests of arbitrary prompt length and token
+budget; the compiled fast path (the PR-2 fused ``lax.scan`` decode, now
+adaptive and mesh-shardable) wants **fixed shapes**.  The
+:class:`ContinuousBatcher` bridges the two:
+
+* requests queue per **prompt bucket** (prompts right-pad to the bucket
+  length by repeating their final token — the repo's models carry no
+  attention pad-mask, so padding conditions the generation on the padded
+  prompt; bucket granularity bounds that overhead and the stats report it);
+* each **wave** admits up to ``n_slots`` same-bucket requests FIFO, fills
+  idle slots by cycling the admitted prompts (their outputs are discarded),
+  and runs ONE fused adaptive dispatch of ``new_token_bucket`` steps for the
+  whole slot batch — under a mesh, slots shard over the batch axes and
+  telemetry aggregates in-graph;
+* every (bucket, token-budget) shape class compiles once; later waves —
+  including waves after a policy re-tune or a ``PolicyReader`` sync — reuse
+  the compiled program (the policy is traced int32 values).
+
+Slots rebind between waves (wave-granular continuous batching).
+Token-granular slot splicing — admitting a fresh request into a mid-flight
+batch — needs per-slot cache indices in ``decode_step`` and is a ROADMAP
+follow-on.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.serve import ServeConfig, generate
+
+__all__ = ["Request", "Completion", "BatcherConfig", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # (L,) int32 prompt
+    max_new: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray          # (max_new,) int32 generated
+    wave: int
+    prompt_len: int
+    bucket: int
+
+
+@dataclasses.dataclass
+class BatcherConfig:
+    n_slots: int = 8                       # fixed decode batch (mesh-divisible)
+    prompt_buckets: Sequence[int] = (16, 32, 64)
+    new_token_bucket: int = 16             # fused scan length per wave
+    observe_every: int = 1                 # telemetry decimation inside the scan
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class ContinuousBatcher:
+    """Admission + wave execution over the fused adaptive decode.
+
+    ``adaptive`` is either the fleet's re-tuning
+    :class:`~repro.runtime.AdaptiveController` (the single store writer) or a
+    replica-side :class:`~repro.fleet.store.PolicyReader` (synced before each
+    wave); ``None`` serves the static policy through the non-adaptive fused
+    scan (single-host only: the engine's sharded path is the adaptive scan,
+    so ``mesh`` requires ``adaptive``).  ``mesh`` shards each wave's slots
+    over the mesh batch axes.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, bcfg: Optional[BatcherConfig] = None,
+                 adaptive=None, mesh=None, par: Optional[ParallelConfig] = None):
+        assert mesh is None or adaptive is not None, (
+            "ContinuousBatcher: mesh= requires an adaptive controller/reader "
+            "(the sharded decode program is the adaptive scan)")
+        self.params = params
+        self.cfg = cfg
+        self.bcfg = bcfg or BatcherConfig()
+        self.adaptive = adaptive
+        self.mesh = mesh
+        self.par = par
+        self.queues: Dict[int, collections.deque] = {
+            b: collections.deque() for b in sorted(self.bcfg.prompt_buckets)
+        }
+        self.wave = 0
+        self._arrival = 0
+        self._order: Dict[int, int] = {}     # rid -> arrival index (FIFO across buckets)
+        self.stats = dict(waves=0, requests=0, real_tokens=0, padded_tokens=0,
+                          filler_tokens=0)
+
+    # -- admission -----------------------------------------------------
+    def bucket_of(self, prompt_len: int) -> int:
+        for b in sorted(self.queues):
+            if prompt_len <= b:
+                return b
+        raise ValueError(
+            f"prompt length {prompt_len} exceeds largest bucket "
+            f"{max(self.queues)}")
+
+    def submit(self, req: Request) -> None:
+        assert req.max_new >= 1, req
+        assert req.max_new <= self.bcfg.new_token_bucket, (
+            f"request {req.rid}: max_new {req.max_new} > token bucket "
+            f"{self.bcfg.new_token_bucket}")
+        assert req.rid not in self._order, f"duplicate pending rid {req.rid}"
+        req.tokens = np.asarray(req.tokens, np.int32).reshape(-1)
+        self.queues[self.bucket_of(len(req.tokens))].append(req)
+        self._order[req.rid] = self._arrival
+        self._arrival += 1
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    # -- wave execution ------------------------------------------------
+    def _pick_bucket(self) -> Optional[int]:
+        """Bucket of the oldest waiting request (FIFO fairness across
+        buckets; within a bucket the deque is already FIFO)."""
+        best, best_order = None, None
+        for b, q in self.queues.items():
+            if q and (best_order is None or self._order[q[0].rid] < best_order):
+                best, best_order = b, self._order[q[0].rid]
+        return best
+
+    def _pad(self, tokens: np.ndarray, bucket: int) -> np.ndarray:
+        pad = bucket - len(tokens)
+        if pad <= 0:
+            return tokens[:bucket]
+        return np.concatenate([tokens, np.full(pad, tokens[-1], np.int32)])
+
+    def step(self) -> List[Completion]:
+        """Run one wave; returns the completions it retired (empty when the
+        queues are drained)."""
+        bucket = self._pick_bucket()
+        if bucket is None:
+            return []
+        bc = self.bcfg
+        q = self.queues[bucket]
+        admitted = [q.popleft() for _ in range(min(bc.n_slots, len(q)))]
+        for req in admitted:                 # retired rids leave the FIFO map
+            del self._order[req.rid]         # (long-running server: no leak)
+        # idle slots cycle the admitted prompts (fixed shape, output discarded)
+        slots = [admitted[i % len(admitted)] for i in range(bc.n_slots)]
+
+        if self.adaptive is not None and hasattr(self.adaptive, "poll"):
+            self.adaptive.poll()             # replica: adopt newer store policy
+
+        batch = np.stack([self._pad(r.tokens, bucket) for r in slots])
+        scfg = ServeConfig(max_new_tokens=bc.new_token_bucket,
+                           temperature=bc.temperature, seed=bc.seed,
+                           fused=True, observe_every=bc.observe_every)
+        out = np.asarray(generate(
+            self.params, {"tokens": jnp.asarray(batch)}, self.cfg, scfg,
+            par=self.par, adaptive=self.adaptive, mesh=self.mesh))
+
+        done = []
+        for i, req in enumerate(admitted):
+            done.append(Completion(req.rid, out[i, :req.max_new], self.wave,
+                                   len(req.tokens), bucket))
+            self.stats["real_tokens"] += int(req.max_new)
+            self.stats["padded_tokens"] += int(
+                bucket - len(req.tokens) + bc.new_token_bucket - req.max_new)
+        self.stats["filler_tokens"] += (
+            (bc.n_slots - len(admitted)) * (bucket + bc.new_token_bucket))
+        self.stats["requests"] += len(admitted)
+        self.stats["waves"] += 1
+        self.wave += 1
+        return done
+
+    def run(self) -> List[Completion]:
+        """Drain the queues; returns all completions in retirement order."""
+        out: List[Completion] = []
+        while self.pending():
+            out.extend(self.step())
+        return out
+
+    def describe(self) -> str:
+        s = self.stats
+        useful = s["real_tokens"]
+        total = useful + s["padded_tokens"] + s["filler_tokens"]
+        util = useful / total if total else 1.0
+        return (f"batcher waves={s['waves']} requests={s['requests']} "
+                f"slot_util={util:.2f} (real={useful} padded={s['padded_tokens']} "
+                f"filler={s['filler_tokens']})")

@@ -1,0 +1,167 @@
+"""Versioned SWAPPER policy store: the fleet's single source of policy truth.
+
+A :class:`PolicyStore` persists :class:`~repro.runtime.policy.SwapPolicy`
+JSON under monotonically increasing versions with a **single-writer /
+many-reader** protocol:
+
+* the writer (the fleet's :class:`~repro.runtime.AdaptiveController`)
+  publishes each re-tuned policy as ``policy_v{N}.json`` followed by an
+  atomic ``CURRENT`` pointer swap — a reader never sees a torn write, and a
+  crash mid-publish leaves the previous version current;
+* readers (serve replicas, restarted trainers) poll ``CURRENT`` and reload
+  only when the version advanced, so steady-state polling is one small
+  ``read()`` per check and adopting a new policy changes **traced int32
+  values only** (zero recompiles downstream).
+
+The same directory format doubles as the train loop's policy checkpoint
+(``launch/train --adaptive`` publishes on re-tune and resumes the newest
+version on elastic restart — see ``AdaptiveController.resume_from_store``).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Optional, Sequence, Tuple
+
+from repro.runtime.policy import SwapPolicy
+
+__all__ = ["PolicyStore", "PolicyReader"]
+
+_CURRENT = "CURRENT"
+_FMT = "policy_v{:06d}.json"
+_RX = re.compile(r"^policy_v(\d{6})\.json$")
+
+
+class PolicyStore:
+    """Directory-backed versioned policy storage (see module docstring).
+
+    Layout::
+
+        <root>/CURRENT              # text file: current version number
+        <root>/policy_v000001.json  # immutable once written
+        <root>/policy_v000002.json
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._last_published: Optional[int] = None
+
+    # -- paths ---------------------------------------------------------
+    def _path(self, version: int) -> str:
+        return os.path.join(self.root, _FMT.format(version))
+
+    def versions(self) -> List[int]:
+        out = []
+        for fn in os.listdir(self.root):
+            m = _RX.match(fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    # -- reader side ---------------------------------------------------
+    def current_version(self) -> Optional[int]:
+        """The published version per the ``CURRENT`` pointer (falls back to
+        the newest on-disk version if the pointer is missing)."""
+        try:
+            with open(os.path.join(self.root, _CURRENT)) as f:
+                return int(f.read().strip())
+        except (FileNotFoundError, ValueError):
+            vs = self.versions()
+            return vs[-1] if vs else None
+
+    def load(self, version: int) -> SwapPolicy:
+        return SwapPolicy.load(self._path(version))
+
+    def load_current(self) -> Optional[Tuple[int, SwapPolicy]]:
+        """(version, policy) of the current pointer, or None when empty.
+        Retries once if the pointed-at file was pruned mid-read."""
+        for _ in range(2):
+            v = self.current_version()
+            if v is None:
+                return None
+            try:
+                return v, self.load(v)
+            except FileNotFoundError:
+                continue
+        return None
+
+    # -- writer side ---------------------------------------------------
+    def publish(self, policy: SwapPolicy) -> int:
+        """Persist ``policy`` as the next version and swing ``CURRENT``.
+
+        Single-writer: raises if another writer advanced the store past this
+        instance's last publish (split-brain guard — a fleet has exactly one
+        re-tuning controller).  The policy's own ``version`` is rewritten to
+        the store version so readers compare a single counter.
+        """
+        cur = self.current_version()
+        if (self._last_published is not None and cur is not None
+                and cur > self._last_published):
+            raise RuntimeError(
+                f"PolicyStore single-writer violation: on-disk version {cur} "
+                f"> last published {self._last_published} (second writer?)")
+        version = (cur or 0) + 1
+        policy.version = version
+        path = self._path(version)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(policy.to_json())
+        os.replace(tmp, path)
+        cur_tmp = os.path.join(self.root, _CURRENT + ".tmp")
+        with open(cur_tmp, "w") as f:
+            f.write(str(version))
+        os.replace(cur_tmp, os.path.join(self.root, _CURRENT))
+        self._last_published = version
+        return version
+
+    def prune(self, keep_last: int = 8) -> List[int]:
+        """Drop all but the newest ``keep_last`` versions (never the current
+        one).  Returns the versions removed."""
+        vs = self.versions()
+        cur = self.current_version()
+        drop = [v for v in vs[:-keep_last] if v != cur] if keep_last else []
+        for v in drop:
+            os.remove(self._path(v))
+        return drop
+
+
+class PolicyReader:
+    """A serve replica's view of the store: polls ``CURRENT``, adopts newer
+    policies, and exposes the same ``dyn_tree()`` / ``observe()`` surface the
+    engine expects from an adaptive controller — so a replica runs the exact
+    same zero-recompile dynamic decode program as the re-tuning host, with
+    telemetry collection decimated away (records are discarded; the fleet
+    aggregate is owned by the writer)."""
+
+    def __init__(self, store: PolicyStore, targets: Sequence[str]):
+        self.store = store
+        self.targets = tuple(targets)
+        self.version: int = -1
+        self.policy: Optional[SwapPolicy] = None
+        self._dyn_cache = None
+        self.poll()
+
+    def poll(self) -> bool:
+        """Adopt the store's current policy if newer; True when it changed."""
+        v = self.store.current_version()
+        if v is None or v == self.version:
+            return False
+        got = self.store.load_current()
+        if got is None:
+            return False
+        self.version, self.policy = got
+        self._dyn_cache = None
+        return True
+
+    # -- engine-facing surface (duck-typed AdaptiveController subset) --
+    def dyn_tree(self):
+        if self.policy is None:
+            raise RuntimeError("PolicyReader: store is empty (no published policy)")
+        if self._dyn_cache is None:
+            self._dyn_cache = self.policy.dyn_tree(self.targets)
+        return self._dyn_cache
+
+    def observe(self, records) -> list:
+        """Replicas do not own the fleet aggregate: records are dropped."""
+        return []

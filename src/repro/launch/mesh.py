@@ -19,6 +19,7 @@ from .sharding import axis_rules, param_spec
 
 __all__ = [
     "make_production_mesh",
+    "make_fleet_mesh",
     "param_shardings",
     "state_shardings",
     "batch_shardings",
@@ -31,6 +32,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_fleet_mesh(n_replicas: Optional[int] = None):
+    """1-D ("data",) serving mesh: each replica holds full weights and
+    serves its slice of the slot batch; the fleet telemetry psums over this
+    axis (``fleet.collect``).  Defaults to every visible device — on a CPU
+    host, force a multi-device fleet with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes (see examples/fleet_serve.py and tests/test_fleet.py)."""
+    n = n_replicas or len(jax.devices())
+    assert len(jax.devices()) >= n, (n, jax.devices())
+    return jax.make_mesh((n,), ("data",))
 
 
 def tree_paths(tree):

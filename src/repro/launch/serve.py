@@ -9,6 +9,14 @@ distribution against the one the policy was tuned on, and on drift the
 controller re-tunes the swap config in place — zero recompilations.  In
 ``--smoke`` mode a synthetic distribution drift is injected mid-generation
 (``--drift-at``) to exercise the loop end-to-end.
+
+``--fleet N`` instead runs the mesh-native serving stack: an N-replica
+("data",) mesh, the continuous-batching scheduler admitting variable-length
+synthetic requests into fixed-shape decode slots, one fused adaptive
+``lax.scan`` dispatch per wave with in-graph (psum) telemetry aggregation,
+and re-tunes published through the versioned ``PolicyStore``
+(``--policy-store``).  On CPU, force replicas with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
@@ -53,6 +61,55 @@ def _drift_hook(at_step: int, scale: float):
     return hook
 
 
+def _run_fleet(args, cfg):
+    """The mesh-native serving stack: fleet mesh + continuous batcher +
+    policy store (see module docstring)."""
+    from repro.fleet import BatcherConfig, ContinuousBatcher, PolicyStore, Request
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.runtime import AdaptiveConfig, AdaptiveController, SwapPolicy
+
+    n = args.fleet
+    if len(jax.devices()) < n:
+        raise SystemExit(
+            f"--fleet {n}: only {len(jax.devices())} devices visible; on CPU "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    mesh = make_fleet_mesh(n)
+    # slots must divide over the replica axis: round the default up to a
+    # multiple of n
+    slots = args.slots or n * max(1, -(-4 // n))
+    store = PolicyStore(args.policy_store)
+    controller = AdaptiveController(
+        SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
+        cfg=AdaptiveConfig(min_observe_steps=2, cooldown_steps=2), store=store,
+        log_fn=lambda line: print(f"[fleet] {line}"))
+    resumed = controller.resume_from_store()
+    print(f"[fleet] mesh={mesh.shape} slots={slots} store={store.root} "
+          f"{'resumed v' + str(store.current_version()) if resumed else 'fresh'}")
+    controller.warmup()
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    bcfg = BatcherConfig(n_slots=slots,
+                         prompt_buckets=(args.prompt_len,),
+                         new_token_bucket=args.new_tokens,
+                         temperature=args.temperature)
+    bat = ContinuousBatcher(params, cfg, bcfg, adaptive=controller, mesh=mesh)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        L = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
+        bat.submit(Request(rid, rng.integers(0, cfg.vocab, L),
+                           max_new=int(rng.integers(1, args.new_tokens + 1))))
+    t0 = time.time()
+    done = bat.run()
+    dt = time.time() - t0
+    toks = sum(len(c.tokens) for c in done)
+    print(f"[fleet] {bat.describe()}")
+    print(f"[fleet] served {len(done)} requests / {toks} tokens in {dt:.2f}s "
+          f"(incl. compile)")
+    print(f"[fleet] {controller.telemetry.describe()}")
+    print(f"[fleet] re-tunes: {len(controller.retunes)} "
+          f"store v{store.current_version()} {controller.policy.describe()}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-72b", choices=sorted(ARCHS))
@@ -70,13 +127,26 @@ def main():
     ap.add_argument("--drift-scale", type=float, default=0.05)
     ap.add_argument("--policy-out", default=None,
                     help="write the final (possibly re-tuned) SwapPolicy JSON here")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve on an N-replica mesh via the continuous "
+                         "batcher + policy store (implies --adaptive)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="--fleet decode slots per wave (default max(N, 4))")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--fleet synthetic request count")
+    ap.add_argument("--policy-store", default="/tmp/repro_policy_store",
+                    help="--fleet PolicyStore root directory")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
     if args.smoke:
         cfg = reduced(cfg)
-    if args.ax or args.adaptive:
+    if args.ax or args.adaptive or args.fleet:
         cfg = dataclasses.replace(cfg, ax=AxPolicy(backend="mxu"))
+
+    if args.fleet:
+        _run_fleet(args, cfg)
+        return
 
     controller = None
     param_hook = None

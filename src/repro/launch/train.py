@@ -6,6 +6,9 @@
 ``--smoke`` uses the reduced same-family config (CPU-runnable ~100M-class
 with --d-model overrides); omit it on real hardware for the full config.
 Supervised: checkpoints every N steps, restarts on failure, straggler log.
+With ``--adaptive``, re-tuned SwapPolicies are versioned into
+``<ckpt_dir>/policy`` (the fleet ``PolicyStore`` format) and a restarted job
+resumes the adapted policy, not the offline-tuned one.
 """
 from __future__ import annotations
 
@@ -70,12 +73,23 @@ def main():
                    donate_argnums=(0,))
 
     if args.adaptive:
+        import os
+
+        from repro.fleet import PolicyStore
         from repro.runtime import AdaptiveController, SwapPolicy
 
+        # policy checkpointing rides the PolicyStore format alongside the
+        # train checkpoints: every re-tune publishes a new version under
+        # <ckpt_dir>/policy, and an elastic restart resumes the *adapted*
+        # policy instead of reverting to the offline-tuned one
+        store = PolicyStore(os.path.join(args.ckpt_dir, "policy"))
         controller = AdaptiveController(
             SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
-            log_fn=lambda line: print(f"[adaptive] {line}"),
+            log_fn=lambda line: print(f"[adaptive] {line}"), store=store,
         )
+        if controller.resume_from_store():
+            print(f"[adaptive] resumed policy v{store.current_version()} "
+                  f"from {store.root}")
         controller.warmup()
 
         pending = [None]   # one-step-stale observe keeps dispatch pipelined
@@ -115,6 +129,7 @@ def main():
         controller.observe(jax.device_get(pending[0]))   # flush final step
         print(f"[adaptive] {controller.telemetry.describe()}")
         print(f"[adaptive] re-tunes: {len(controller.retunes)} "
+              f"store v{store.current_version()} "
               f"final {controller.policy.describe()}")
     print(f"done: {log}")
 

@@ -130,8 +130,14 @@ class AdaptiveController:
         targets: Sequence[str],
         cfg: Optional[AdaptiveConfig] = None,
         log_fn: Optional[Callable[[str], None]] = None,
+        store=None,
     ):
+        """``store`` — optional ``fleet.PolicyStore`` this controller writes:
+        every re-tune is published as a new monotonic version so serve
+        replicas (``fleet.PolicyReader``) and elastic restarts
+        (:meth:`resume_from_store`) pick the adapted policy up."""
         self.policy = policy
+        self.store = store
         self.targets = tuple(targets)
         self.cfg = cfg or AdaptiveConfig()
         self.mult = M.get(policy.mult_name)
@@ -166,6 +172,45 @@ class AdaptiveController:
             self._dyn_cache = (self.policy.version,
                                self.policy.dyn_tree(self.targets))
         return self._dyn_cache[1]
+
+    def adopt(self, policy: SwapPolicy) -> None:
+        """Replace the live policy (store restore / reader sync).  The dyn
+        tree structure is keyed on ``self.targets``, so adoption changes
+        traced int32 values only — no retrace downstream."""
+        assert policy.mult_name == self.policy.mult_name, (
+            policy.mult_name, self.policy.mult_name)
+        self.policy = policy
+        self._dyn_cache = None
+
+    def resume_from_store(self) -> bool:
+        """Elastic-restart protocol: adopt the store's current policy when
+        one exists (True), else publish the starting policy as version 1 so a
+        crash before the first re-tune still restores deterministically."""
+        if self.store is None:
+            return False
+        got = self.store.load_current()
+        if got is not None:
+            version, policy = got
+            self.adopt(policy)
+            self._emit(f"resumed policy v{version} from store")
+            return True
+        self.store.publish(self.policy)
+        return False
+
+    def rebase_reference(self, threshold: Optional[float] = None) -> None:
+        """End-of-warm-up freeze: rebase every target's drift reference to
+        the *converged* telemetry snapshot (the first-sighting reference is
+        still mid-EW-convergence and inflates stationary scores), optionally
+        arming the detector with its production ``threshold`` at the same
+        time.  Fleet note: a single-shard anomaly reaches this controller
+        diluted by the psum over N shards, so fleet thresholds scale ~1/N of
+        their single-host settings."""
+        for target, snap in self.telemetry.snapshot().items():
+            if snap.get("bit_probs") is not None:
+                self.detector.rebase(target, snap["bit_probs"])
+        if threshold is not None:
+            self.detector.cfg.threshold = threshold
+            self.cfg.drift_threshold = threshold
 
     def warmup(self) -> None:
         """Pre-compile the re-tune scorer so later re-tunes cost zero
@@ -227,4 +272,7 @@ class AdaptiveController:
                          float(scores[old_idx]), float(scores[best]))
         self.retunes.append(ev)
         self._emit(ev.describe())
+        if self.store is not None:
+            v = self.store.publish(self.policy)
+            self._emit(f"published policy v{v}")
         return ev

@@ -128,6 +128,19 @@ class SwapPolicy:
         with open(path) as f:
             return cls.from_json(f.read())
 
+    def configs_equal(self, other: "SwapPolicy") -> bool:
+        """True when both policies resolve identically (same multiplier, same
+        config map, bit-equal tile grids) — version/meta excluded, so a
+        replica that adopted a published policy compares equal to the
+        writer's live one.  (Dataclass ``==`` is unusable here: ndarray tile
+        grids make it raise.)"""
+        if self.mult_name != other.mult_name or self.configs != other.configs:
+            return False
+        if set(self.tile_grids) != set(other.tile_grids):
+            return False
+        return all(np.array_equal(g, other.tile_grids[k])
+                   for k, g in self.tile_grids.items())
+
     def describe(self) -> str:
         parts = [f"policy[{self.mult_name} v{self.version}]"]
         for k, c in sorted(self.configs.items()):

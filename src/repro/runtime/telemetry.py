@@ -30,13 +30,27 @@ from repro.core.swapper import apply_swapper_dyn
 __all__ = [
     "TELEMETRY_SAMPLE",
     "RETUNE_SAMPLE",
+    "SUM_FIELDS",
+    "MAX_FIELDS",
+    "SAMPLE_FIELDS",
     "operand_summary",
+    "combine_records",
     "TargetTelemetry",
     "Telemetry",
 ]
 
 TELEMETRY_SAMPLE = 2048   # elements of each operand entering the bit/error stats
 RETUNE_SAMPLE = 512       # operand sample exported per call for the re-tune buffer
+
+# Cross-shard reduction classes of the summary fields (consumed by
+# ``fleet.collect``): occupancy/error/limb counters are plain sums (psum over
+# the mesh batch axes is exact), the worst-case error is a max, and operand
+# samples concatenate (all-gather).  With TELEMETRY_SAMPLE=2048 the uint32
+# limb sums stay overflow-free up to 32 shards (32 * 2048 * 0xFFFF < 2^32).
+SUM_FIELDS = ("bits_a", "bits_b", "neg_a", "neg_b", "n",
+              "err_lo", "err_hi", "err_cnt")
+MAX_FIELDS = ("err_max",)
+SAMPLE_FIELDS = ("a_smp", "b_smp")
 
 
 def _flat_sample(x, n: int):
@@ -105,6 +119,29 @@ def operand_summary(xq, wq, mult: AxMult, dyn, gate=None) -> dict:
         a_smp=_flat_sample(xq, RETUNE_SAMPLE),
         b_smp=_flat_sample(wq, RETUNE_SAMPLE),
     )
+
+
+def combine_records(shard_records) -> Dict[str, Dict[str, np.ndarray]]:
+    """Host-side reference combiner: fold per-shard record trees into the
+    fleet record (sum/max/concat per the field classes above).  This is the
+    oracle the in-graph ``fleet.collect.aggregate_records`` psum path is
+    tested bit-exactly against."""
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    for records in shard_records:
+        for target, rec in records.items():
+            acc = out.get(target)
+            if acc is None:
+                out[target] = {k: np.asarray(v).copy() for k, v in rec.items()}
+                continue
+            for k, v in rec.items():
+                v = np.asarray(v)
+                if k in MAX_FIELDS:
+                    acc[k] = np.maximum(acc[k], v)
+                elif k in SAMPLE_FIELDS:
+                    acc[k] = np.concatenate([acc[k], v], axis=-2)
+                else:
+                    acc[k] = acc[k] + v
+    return out
 
 
 # ---------------------------------------------------------------------------

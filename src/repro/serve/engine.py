@@ -17,6 +17,22 @@ stays warm throughout (zero recompilations; see runtime/).  Telemetry is
 decimated by ``ServeConfig.observe_every``: the observe gate enters the
 compiled step as a traced boolean, so off-steps skip the summary compute
 (``lax.cond``) *and* the host-side device_get without retracing anything.
+
+**Adaptive decode is also fused** (``ServeConfig.fused=True``, no
+``param_hook``): the whole adaptive token loop runs as one ``lax.scan`` with
+the per-step telemetry records threaded through the scan carry — each gated
+step scatter-adds its fixed-shape record into slot ``i // observe_every`` of
+a ``ceil(T/k)``-slot carry buffer (off-steps contribute ``lax.cond`` zeros),
+so adaptive serving pays **one dispatch per generation** and the host folds
+the slot records into the controller afterwards.  The policy is therefore
+frozen within a generation; re-tunes land between generations (the stepwise
+loop remains for mid-generation adaptation and ``param_hook``).
+
+With ``mesh=...`` the fused adaptive scan additionally runs under
+``shard_map`` over the mesh batch axes: every shard decodes its batch slice
+and the telemetry records are ``psum``/``pmax``/all-gathered **in-graph**
+(``fleet.collect``) before leaving the trace, so one controller sees the
+fleet-global operand distribution.
 """
 from __future__ import annotations
 
@@ -54,16 +70,22 @@ def _sampler(scfg: ServeConfig):
 
 def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
              par: Optional[ParallelConfig] = None, adaptive=None,
-             param_hook: Optional[Callable] = None):
+             param_hook: Optional[Callable] = None, mesh=None):
     """prompt_batch: {'tokens': (B, S)} (or family-specific prefill inputs).
     Returns (B, max_new_tokens) int32.
 
-    ``adaptive`` — optional AdaptiveController driving the dynamic SWAPPER
-    policy for ``cfg.ax.targets`` projections during decode.
+    ``adaptive`` — optional AdaptiveController (or ``fleet.PolicyReader``)
+    driving the dynamic SWAPPER policy for ``cfg.ax.targets`` projections
+    during decode.
     ``param_hook(step, params) -> params`` — optional per-step parameter
     transform (used by the serve driver to inject synthetic distribution
     drift; values change, shapes don't, so the step is not retraced).  A hook
     forces the stepwise Python loop (params must change between steps).
+    ``mesh`` — optional device mesh for the fleet path: the fused adaptive
+    decode shards its batch over the mesh batch axes under ``shard_map`` and
+    telemetry is aggregated in-graph (requires ``adaptive`` and
+    ``scfg.fused``; greedy decoding is bit-identical to the single-host run,
+    temperature sampling draws per-shard).
     """
     S = (prompt_batch["tokens"].shape[1] if "tokens" in prompt_batch
          else prompt_batch["embeds"].shape[1])
@@ -76,7 +98,12 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
     tok = sample(logits, key)
 
     if adaptive is None and param_hook is None and scfg.fused:
+        assert mesh is None, "mesh= requires the adaptive fused path"
         return _generate_fused(params, cache, tok, key, S, cfg, scfg, par)
+    if adaptive is not None and param_hook is None and scfg.fused:
+        return _generate_fused_adaptive(params, cache, tok, key, S, B, cfg,
+                                        scfg, par, adaptive, mesh)
+    assert mesh is None, "mesh= requires the adaptive fused path (no param_hook)"
     return _generate_stepwise(params, cache, tok, key, S, cfg, scfg, par,
                               adaptive, param_hook)
 
@@ -115,6 +142,97 @@ def _generate_fused(params, cache, tok, key, S, cfg, scfg: ServeConfig, par):
     decode_scan = _fused_decode_fn(cfg, par, n_steps, scfg.temperature)
     toks = decode_scan(params, cache, tok, key, jnp.int32(S))
     return jnp.concatenate([tok[:, None], jnp.swapaxes(toks, 0, 1)], axis=1)
+
+
+# adaptive fused-decode program cache: (cfg, par, n_steps, temperature,
+# k_obs, mesh, cache treedef, batch) -> jitted scan.  Policy values are
+# traced inputs, so every policy update and every wave of a fixed-shape
+# scheduler bucket reuses one entry (tests assert _cache_size() == 1).
+_ADAPTIVE_FNS = {}
+
+
+def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
+                        k_obs: int, mesh, cache, batch: int):
+    """Build (and cache) the fused adaptive decode: one ``lax.scan`` over the
+    token loop with telemetry threaded through the scan carry, optionally
+    shard_map'd over the mesh batch axes with in-graph record aggregation."""
+    treedef = jax.tree_util.tree_structure(cache)
+    key = (cfg, par, n_steps, temperature, k_obs, mesh, treedef, batch)
+    if key in _ADAPTIVE_FNS:
+        return _ADAPTIVE_FNS[key]
+
+    from repro.runtime import ax_scope
+
+    # telemetry records must be fixed-shape scan-carry leaves: the layer
+    # stack is unrolled inside the token-scan body (as in the stepwise path)
+    dec_par = dataclasses.replace(par or ParallelConfig(), scan_layers=False)
+    sample = _sampler(ServeConfig(temperature=temperature))
+    n_obs = -(-n_steps // k_obs)          # carry slots: one per gated step
+
+    if mesh is not None:
+        from repro.fleet.collect import aggregate_records, shard_decode_specs, shard_map
+
+        in_specs, out_specs, axes = shard_decode_specs(cache, batch, mesh)
+    else:
+        axes = ()
+
+    def decode_scan(params, cache, tok0, key0, start, dyn):
+        def probe(params, cache, tok0, start, dyn):
+            with ax_scope(dyn, collect=True) as sc:
+                decode_step(params, cache, tok0[:, None], start, cfg, dec_par)
+                return sc.collected()
+
+        shapes = jax.eval_shape(probe, params, cache, tok0, start, dyn)
+        bufs0 = jax.tree.map(
+            lambda s: jnp.zeros((n_obs,) + s.shape, s.dtype), shapes)
+
+        def step(carry, i):
+            tok, cache, key, bufs = carry
+            key, sub = jax.random.split(key)
+            gate = (i % k_obs) == 0
+            with ax_scope(dyn, collect=True, gate=gate) as sc:
+                logits, cache = decode_step(params, cache, tok[:, None],
+                                            start + i, cfg, dec_par)
+                telem = sc.collected()
+            tok = sample(logits, sub)
+            # off-steps produced lax.cond zeros, so the unconditional
+            # scatter-add leaves exactly the gated step's record in its slot
+            bufs = jax.tree.map(lambda b, r: b.at[i // k_obs].add(r),
+                                bufs, telem)
+            return (tok, cache, key, bufs), tok
+
+        (_, _, _, bufs), toks = jax.lax.scan(
+            step, (tok0, cache, key0, bufs0),
+            jnp.arange(n_steps, dtype=jnp.int32))
+        bufs = aggregate_records(bufs, axes) if axes else bufs
+        return toks, bufs                       # (n_steps, B), slot records
+
+    if mesh is not None:
+        decode_scan = shard_map(decode_scan, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_rep=False)
+    fn = jax.jit(decode_scan)
+    _ADAPTIVE_FNS[key] = fn
+    return fn
+
+
+def _generate_fused_adaptive(params, cache, tok, key, S, B, cfg,
+                             scfg: ServeConfig, par, adaptive, mesh):
+    """Whole adaptive decode loop as one dispatch: run the telemetry-carrying
+    scan, then fold each observed slot's fleet record into the controller (in
+    step order, matching the stepwise loop's observe sequence)."""
+    n_steps = scfg.max_new_tokens - 1
+    if n_steps <= 0:
+        return tok[:, None]
+    k_obs = max(1, int(scfg.observe_every))
+    fn = _adaptive_decode_fn(cfg, par, n_steps, scfg.temperature, k_obs,
+                             mesh, cache, B)
+    toks, bufs = fn(params, cache, tok, key, jnp.int32(S), adaptive.dyn_tree())
+    out = jnp.concatenate([tok[:, None], jnp.swapaxes(toks, 0, 1)], axis=1)
+    bufs = jax.device_get(bufs)
+    for j in range(-(-n_steps // k_obs)):
+        adaptive.observe({t: {k: v[j] for k, v in rec.items()}
+                          for t, rec in bufs.items()})
+    return out
 
 
 def _generate_stepwise(params, cache, tok, key, S, cfg, scfg: ServeConfig, par,
