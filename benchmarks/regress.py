@@ -29,6 +29,10 @@ RULES = [
     ("fleet.adaptive_decode.bit_identical", "true"),
     ("fleet.adaptive_decode.telemetry_identical", "true"),
     ("fleet.adaptive_decode.retrace_free", "true"),
+    # per-tile adaptation (PR 4): the controller's tile loop must keep
+    # beating the layer-granular policy on at least one app stream, with a
+    # recompile-free tile re-tune (deterministic: fixed seeds, counter data)
+    ("tile_adaptation.tile_beats_layer", "true"),
 ]
 
 # informational wall-time trajectory (never gating)

@@ -5,10 +5,10 @@
 Prints each table and a ``name,us_per_call,derived`` CSV summary line per
 benchmark (derived = the table's headline number).  Also runs the hot-path
 perf microbenchmarks plus the fleet-serving microbenchmarks and writes
-``BENCH_3.json`` (dispatch / reduction / decode / fleet numbers — this PR's
-point on the perf trajectory).  ``--check`` then diffs the artifact's
-deterministic counters against the committed baseline
-(``benchmarks/baselines/BENCH_2.json``) and exits non-zero on regression —
+``BENCH_4.json`` (dispatch / reduction / decode / fleet / tile-adaptation
+numbers — this PR's point on the perf trajectory).  ``--check`` then diffs
+the artifact's deterministic counters against the committed baseline
+(``benchmarks/baselines/BENCH_3.json``) and exits non-zero on regression —
 wall times are reported informationally only (see ``benchmarks.regress``).
 """
 from __future__ import annotations
@@ -25,11 +25,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small fast subset")
     ap.add_argument("--full", action="store_true", help="all multipliers + ALL parts")
-    ap.add_argument("--bench-out", default="BENCH_3.json",
-                    help="perf/fleet JSON artifact path")
+    ap.add_argument("--bench-out", default="BENCH_4.json",
+                    help="perf/fleet/tile JSON artifact path")
     ap.add_argument("--check", action="store_true",
                     help="fail on deterministic-counter regression vs --baseline")
-    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_2.json",
+    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_3.json",
                     help="committed baseline artifact for --check")
     args = ap.parse_args()
 
@@ -63,7 +63,8 @@ def main() -> None:
     csv.append(f"adaptive_table,{1e6*(time.time()-t0)/max(len(ad['rows']),1):.0f},"
                f"adaptive_gain_vs_static={100*ad['gain_vs_static']:.1f}%"
                f" retunes={ad['retunes']}"
-               f" telemetry_us_per_step={ad['telemetry_us_per_step']:.0f}")
+               f" telemetry_us_per_step={ad['telemetry_us_per_step']:.0f}"
+               f" tile_best_gain={100*ad['tile']['best_gain']:.1f}%")
 
     t0 = time.time()
     perf = perf_table.run(quick=args.quick)
@@ -86,8 +87,9 @@ def main() -> None:
                f" slot_util={100*fleet['scheduler']['slot_utilization']:.0f}%")
 
     perf["fleet"] = fleet
+    perf["tile_adaptation"] = ad["tile"]
     perf_table.write_json(perf, args.bench_out)
-    print(f"(perf+fleet tables written to {args.bench_out})")
+    print(f"(perf+fleet+tile tables written to {args.bench_out})")
 
     t0 = time.time()
     hw = hw_table.run()

@@ -42,6 +42,7 @@ from .swapper import (
     swap_mask_dyn,
     swapped_mult,
 )
+from .tiling import rowtile_count, rowtile_index, rowtile_span
 from .tuning import (
     ComponentResult,
     TwoBitConfig,

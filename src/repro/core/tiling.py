@@ -1,0 +1,51 @@
+"""The row -> row-tile map shared by everything per-tile.
+
+Per-tile semantics only hold if the rows a config tile is *applied to* are
+exactly the rows whose telemetry that tile *observed*.  Three layers
+consume the same partition — execution (``quant.ax``: the mxu per-row path
+and the Pallas grid-kernel block alignment), telemetry
+(``runtime.telemetry.tile_summary``) and the controller's buffers — so the
+partition lives here once: ``gm`` requested tiles become
+``rowtile_count = min(gm, M)`` actual tiles of ``rowtile_span =
+floor(M / count)`` rows, the LAST tile absorbing the remainder (up to
+``span - 1`` extra rows).  The floor span guarantees every tile is
+occupied by real rows — a ceil span would leave trailing "ghost" tiles
+whose telemetry could only be fabricated and whose published configs no
+row would ever execute.  All host-side numpy: tile *membership* is a
+compile-time constant everywhere; only the config values are traced.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["rowtile_count", "rowtile_span", "rowtile_index",
+           "largest_divisor_leq"]
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1).  The block/slab
+    sizing primitive shared by the Pallas reduction schedule
+    (``kernels.ax_matmul._pick_k_slab``) and the tile-aligned block choice
+    of the quant layer (``quant.ax._block_of``)."""
+    d = max(1, min(n, cap))
+    while n % d:
+        d -= 1
+    return d
+
+
+def rowtile_count(M: int, gm: int) -> int:
+    """Actual number of row tiles: ``gm`` capped by the row count."""
+    return max(1, min(gm, M))
+
+
+def rowtile_span(M: int, gm: int) -> int:
+    """Rows per tile, ``floor(M / rowtile_count)`` (the last tile absorbs
+    the remainder, so every tile holds at least ``span`` real rows)."""
+    return max(1, M // rowtile_count(M, gm))
+
+
+def rowtile_index(M: int, gm: int) -> np.ndarray:
+    """(M,) int array: the tile index of every row (last tile absorbs the
+    remainder when the span does not divide ``M``)."""
+    return np.minimum(np.arange(M) // rowtile_span(M, gm),
+                      rowtile_count(M, gm) - 1)

@@ -28,6 +28,8 @@ from repro.runtime.telemetry import (
     SAMPLE_FIELDS,
     SUM_FIELDS,
     operand_summary,
+    tile_key,
+    tile_summary,
 )
 
 try:  # jax >= 0.5 re-exports shard_map at the top level
@@ -56,8 +58,11 @@ def _reduce_field(name: str, leaf, axes: Tuple[str, ...]):
     if name in MAX_FIELDS:
         return jax.lax.pmax(leaf, axes)
     if name in SAMPLE_FIELDS:
-        # concatenate shard samples along the call axis (axis -2: works for
-        # both per-step (ncalls, S) and slot-buffered (slots, ncalls, S))
+        # concatenate shard samples along axis -2: the call axis for the
+        # scalar records ((ncalls, S) / slot-buffered (slots, ncalls, S)),
+        # and the sample axis for the tile records — their samples are laid
+        # out (..., S, gm) sample-major precisely so this shared rule
+        # extends each tile's sample column instead of inventing new tiles
         return jax.lax.all_gather(leaf, axes, axis=leaf.ndim - 2, tiled=True)
     assert name in SUM_FIELDS, f"unclassified telemetry field {name!r}"
     return jax.lax.psum(leaf, axes)
@@ -138,12 +143,21 @@ def shard_decode_specs(cache, batch: int, mesh: Mesh):
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=16)
-def make_sharded_summarizer(mult_name: str, mesh: Mesh, target: str = "stream"):
+def make_sharded_summarizer(mult_name: str, mesh: Mesh, target: str = "stream",
+                            tile_rows: int = 0):
     """jit(shard_map(...)) producing the fleet-aggregated telemetry record of
     a raw int operand pair stream sharded over the mesh batch axes.  Feed the
     result straight to ``AdaptiveController.observe`` — the controller then
     re-tunes from the *global* operand distribution while each shard only
-    ever summarized its local slice."""
+    ever summarized its local slice.
+
+    ``tile_rows > 0`` additionally emits the per-row-tile record (sharding a
+    2-D stream's *rows*, i.e. each shard summarizes its local row slice at
+    ``tile_rows`` tiles): the returned dict then maps both ``target`` and
+    ``tile_key(target)`` to fleet-aggregated records — tile histograms psum
+    position-wise (shard-local row tile t pools into fleet tile t), tile
+    samples all-gather along the sample axis, so the controller's per-tile
+    re-tune sees every shard's traffic for each tile position."""
     from repro.core import multipliers as M
 
     mult = M.get(mult_name)
@@ -156,8 +170,13 @@ def make_sharded_summarizer(mult_name: str, mesh: Mesh, target: str = "stream"):
 
     def local(a, b, dyn):
         rec = operand_summary(a, b, mult, dyn)
-        rec = {k: v[None] for k, v in rec.items()}       # leading call axis
-        return aggregate_records({target: rec}, axes)[target]
+        if tile_rows == 0:                   # original single-record surface
+            rec = {k: v[None] for k, v in rec.items()}   # leading call axis
+            return aggregate_records({target: rec}, axes)[target]
+        trec = tile_summary(a, b, mult, tile_rows)
+        recs = {target: {k: v[None] for k, v in rec.items()},
+                tile_key(target): {k: v[None] for k, v in trec.items()}}
+        return aggregate_records(recs, axes)
 
     f = shard_map(local, mesh=mesh,
                   in_specs=(P(axes), P(axes), P()), out_specs=P(),

@@ -16,6 +16,12 @@ many-reader** protocol:
 The same directory format doubles as the train loop's policy checkpoint
 (``launch/train --adaptive`` publishes on re-tune and resumes the newest
 version on elastic restart — see ``AdaptiveController.resume_from_store``).
+
+Published policies carry the *whole* granularity hierarchy — global /
+per-target / per-layer scalar configs AND per-row-tile ``tile_grids`` — in
+one JSON document, so a tile-granular re-tune propagates to every replica
+through the exact same version bump as a scalar one (see
+``docs/policy-lifecycle.md`` for the full lifecycle).
 """
 from __future__ import annotations
 
@@ -128,15 +134,26 @@ class PolicyStore:
 
 class PolicyReader:
     """A serve replica's view of the store: polls ``CURRENT``, adopts newer
-    policies, and exposes the same ``dyn_tree()`` / ``observe()`` surface the
-    engine expects from an adaptive controller — so a replica runs the exact
-    same zero-recompile dynamic decode program as the re-tuning host, with
+    policies, and exposes the same ``dyn_tree()`` / ``observe()`` /
+    ``tile_rows`` surface the engine expects from an adaptive controller —
+    so a replica runs the exact same zero-recompile dynamic decode program
+    as the re-tuning host (including per-row-tile config grids when
+    ``tile_rows > 0``: a published ``tile_grids`` entry lands here as new
+    traced int32 values on the next :meth:`poll`, no retrace), with
     telemetry collection decimated away (records are discarded; the fleet
-    aggregate is owned by the writer)."""
+    aggregate is owned by the writer).
 
-    def __init__(self, store: PolicyStore, targets: Sequence[str]):
+    :meth:`staleness` is the replica's lag metric — how many store versions
+    CURRENT has advanced past the one this replica serves.  It reads only
+    the (small) CURRENT pointer, so fleet monitors can sample it cheaply
+    without forcing an adoption (``launch/serve --fleet`` prints it per
+    replica)."""
+
+    def __init__(self, store: PolicyStore, targets: Sequence[str],
+                 tile_rows: int = 0):
         self.store = store
         self.targets = tuple(targets)
+        self.tile_rows = int(tile_rows)
         self.version: int = -1
         self.policy: Optional[SwapPolicy] = None
         self._dyn_cache = None
@@ -154,12 +171,23 @@ class PolicyReader:
         self._dyn_cache = None
         return True
 
+    def staleness(self) -> int:
+        """Store versions this replica is behind ``CURRENT`` (0 = serving
+        the newest policy; one cheap pointer read, adopts nothing).  A
+        replica that has never adopted anything (spun up against an empty
+        store) counts as behind *every* published version — maximal lag,
+        not zero."""
+        v = self.store.current_version()
+        if v is None:
+            return 0
+        return max(0, v - max(self.version, 0))
+
     # -- engine-facing surface (duck-typed AdaptiveController subset) --
     def dyn_tree(self):
         if self.policy is None:
             raise RuntimeError("PolicyReader: store is empty (no published policy)")
         if self._dyn_cache is None:
-            self._dyn_cache = self.policy.dyn_tree(self.targets)
+            self._dyn_cache = self.policy.dyn_tree(self.targets, self.tile_rows)
         return self._dyn_cache
 
     def observe(self, records) -> list:

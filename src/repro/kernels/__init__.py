@@ -9,7 +9,7 @@
 ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
 """
 from .ops import ax_matmul, ax_matmul_dequant, ax_matmul_grid, component_sweep_pallas
-from .ref import ax_matmul_grid_ref, ax_matmul_ref, tuning_sweep_ref
+from .ref import ax_matmul_grid_ref, ax_matmul_ref, tile_hist_ref, tuning_sweep_ref
 
 __all__ = [
     "ax_matmul",
@@ -18,5 +18,6 @@ __all__ = [
     "component_sweep_pallas",
     "ax_matmul_ref",
     "ax_matmul_grid_ref",
+    "tile_hist_ref",
     "tuning_sweep_ref",
 ]

@@ -38,7 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.multipliers import AxMult
 from repro.core.swapper import SwapConfig, swap_mask_dyn
 
-__all__ = ["ax_matmul_pallas", "ax_matmul_grid_pallas"]
+__all__ = ["ax_matmul_pallas", "ax_matmul_grid_pallas", "HIST_WIDTH"]
 
 # renamed TPUCompilerParams -> CompilerParams across jax releases
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
@@ -58,21 +58,47 @@ def _swap_select(a, b, swap: Optional[SwapConfig]):
 DEFAULT_K_SLAB = 8   # sublanes per reduction slab (one VPU register of int32)
 
 
+def HIST_WIDTH(bits: int) -> int:
+    """Columns of a tile histogram row: one count per magnitude-bit position
+    plus a trailing negative-sign count — the same layout as the streaming
+    telemetry's ``bit_probs`` statistic (``runtime.telemetry._bit_counts``)."""
+    return bits + 1
+
+
+def _hist_row(blk_i32, bits: int):
+    """(bits+1,) int32 occupancy counts of one operand block: per-position
+    set **magnitude** bits, then the negative count (raw two's-complement
+    bits are a poor drift statistic for signed operands — see telemetry)."""
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    mag = jnp.abs(blk_i32)
+    cnt = jnp.sum((mag[:, :, None] >> shifts) & 1, axis=(0, 1), dtype=jnp.int32)
+    neg = jnp.sum((blk_i32 < 0).astype(jnp.int32), dtype=jnp.int32)
+    return jnp.concatenate([cnt, neg[None]])
+
+
 def _pick_k_slab(bk: int, k_slab: Optional[int]) -> int:
     """Largest divisor of ``bk`` that is <= ``k_slab`` (None = default)."""
-    want = DEFAULT_K_SLAB if k_slab is None else k_slab
-    ks = min(want, bk)
-    while bk % ks:
-        ks -= 1
-    return max(ks, 1)
+    from repro.core.tiling import largest_divisor_leq
+
+    return largest_divisor_leq(bk, DEFAULT_K_SLAB if k_slab is None else k_slab)
 
 
 def _accumulate_tile(a_ref, b_ref, o_ref, select, mult: AxMult, bk: int,
-                     k_slab: Optional[int] = None):
+                     k_slab: Optional[int] = None, hist_ref=None):
     """Shared (bm, bn) output-tile accumulation (K innermost, output-block
     revisiting): ``select(a, b)`` applies the SWAPPER front-end — static
     config for ``_ax_matmul_kernel``, scalar-prefetched triple for the grid
     kernel.
+
+    ``hist_ref`` — optional (1, 1, 2, bits+1) int32 output block: tile-local
+    bit-occupancy histograms, accumulated here at the existing per-tile
+    reduction point (the operand blocks are already VMEM-resident for the
+    reduction, so the counts cost a handful of extra VPU reductions and no
+    additional loads).  Row 0 counts the A tile (bm x K elements over the
+    whole reduction), row 1 the B tile (K x bn); the layout matches the
+    telemetry drift statistic (magnitude-bit counts + sign count).  This is
+    what lets the adaptive controller see *within-matmul* operand structure
+    and populate per-row-tile swap grids from live traffic.
 
     The K reduction is slab-blocked sublane vectorization: instead of ``bk``
     rank-1 VPU steps (one (bm, 1) x (1, bn) broadcast multiply per k), each
@@ -86,9 +112,15 @@ def _accumulate_tile(a_ref, b_ref, o_ref, select, mult: AxMult, bk: int,
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
+        if hist_ref is not None:
+            hist_ref[...] = jnp.zeros_like(hist_ref)
 
     a_blk = a_ref[...].astype(jnp.int32)          # (bm, bk)
     b_blk = b_ref[...].astype(jnp.int32)          # (bk, bn)
+    if hist_ref is not None:
+        bits = mult.bits
+        hist_ref[0, 0, 0, :] += _hist_row(a_blk, bits)
+        hist_ref[0, 0, 1, :] += _hist_row(b_blk, bits)
     ks = _pick_k_slab(bk, k_slab)
 
     def body(s, acc):
@@ -103,12 +135,13 @@ def _accumulate_tile(a_ref, b_ref, o_ref, select, mult: AxMult, bk: int,
     o_ref[...] += acc
 
 
-def _ax_matmul_kernel(a_ref, b_ref, o_ref, *, mult: AxMult, swap, bk: int,
+def _ax_matmul_kernel(a_ref, b_ref, o_ref, *rest, mult: AxMult, swap, bk: int,
                       k_slab: Optional[int] = None):
-    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost."""
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost.
+    With ``tile_hist`` the histogram block arrives as a second output ref."""
     _accumulate_tile(a_ref, b_ref, o_ref,
                      lambda a, b: _swap_select(a, b, swap), mult, bk,
-                     k_slab=k_slab)
+                     k_slab=k_slab, hist_ref=rest[0] if rest else None)
 
 
 def ax_matmul_pallas(
@@ -121,11 +154,17 @@ def ax_matmul_pallas(
     block_n: int = 128,
     block_k: int = 128,
     k_slab: Optional[int] = None,
+    tile_hist: bool = False,
     interpret: bool = True,
-) -> jax.Array:
+):
     """Blocked approximate matmul; returns int32 (M, N).  ``k_slab`` sets
     the sublane depth of the vectorized K reduction (None = auto; 1 = the
-    legacy rank-1 schedule, kept for benchmarking)."""
+    legacy rank-1 schedule, kept for benchmarking).
+
+    ``tile_hist=True`` additionally returns a (M/bm, N/bn, 2, bits+1) int32
+    tile-local bit-occupancy histogram (per output tile: magnitude-bit +
+    sign counts of the A and B operand tiles), accumulated inside the K
+    reduction — the kernel-side feed of the per-tile adaptive loop."""
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
@@ -135,6 +174,14 @@ def ax_matmul_pallas(
 
     kernel = functools.partial(_ax_matmul_kernel, mult=mult, swap=swap, bk=bk,
                                k_slab=k_slab)
+    out_shape = jax.ShapeDtypeStruct((M, N), jnp.int32)
+    out_specs = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    if tile_hist:
+        hw = HIST_WIDTH(mult.bits)
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((grid[0], grid[1], 2, hw), jnp.int32)]
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, 1, 2, hw), lambda i, j, k: (i, j, 0, 0))]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -142,8 +189,8 @@ def ax_matmul_pallas(
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
@@ -155,8 +202,8 @@ def ax_matmul_pallas(
 # granular (per-tile) swap-config grids — the adaptive-runtime kernel
 # ---------------------------------------------------------------------------
 
-def _ax_matmul_grid_kernel(cfg_ref, a_ref, b_ref, o_ref, *, mult: AxMult, bk: int,
-                           k_slab: Optional[int] = None):
+def _ax_matmul_grid_kernel(cfg_ref, a_ref, b_ref, o_ref, *rest, mult: AxMult,
+                           bk: int, k_slab: Optional[int] = None):
     """Like ``_ax_matmul_kernel`` but the swap decision comes from a
     scalar-prefetched (grid_m, grid_n, 3) int32 triple grid indexed by the
     output-tile coordinates: op_is_a / bit / value are runtime values, so the
@@ -171,7 +218,8 @@ def _ax_matmul_grid_kernel(cfg_ref, a_ref, b_ref, o_ref, *, mult: AxMult, bk: in
         sel = swap_mask_dyn(a, b, op_is_a, bit, value)    # slab broadcast
         return jnp.where(sel, b, a), jnp.where(sel, a, b)
 
-    _accumulate_tile(a_ref, b_ref, o_ref, select, mult, bk, k_slab=k_slab)
+    _accumulate_tile(a_ref, b_ref, o_ref, select, mult, bk, k_slab=k_slab,
+                     hist_ref=rest[0] if rest else None)
 
 
 def ax_matmul_grid_pallas(
@@ -184,10 +232,17 @@ def ax_matmul_grid_pallas(
     block_n: int = 128,
     block_k: int = 128,
     k_slab: Optional[int] = None,
+    tile_hist: bool = False,
     interpret: bool = True,
-) -> jax.Array:
+):
     """Blocked approximate matmul with a per-output-tile swap-config grid
-    (scalar prefetch: the grid is resident in SMEM before the body runs)."""
+    (scalar prefetch: the grid is resident in SMEM before the body runs).
+
+    ``tile_hist=True`` additionally returns the (M/bm, N/bn, 2, bits+1)
+    int32 tile-local bit-occupancy histogram (see :func:`ax_matmul_pallas`)
+    — the same compiled program both *applies* the per-tile policy and
+    *observes* the per-tile operand distribution that drives its next
+    re-tune, which is the whole per-tile adaptive loop in one dispatch."""
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
@@ -198,6 +253,14 @@ def ax_matmul_grid_pallas(
 
     kernel = functools.partial(_ax_matmul_grid_kernel, mult=mult, bk=bk,
                                k_slab=k_slab)
+    out_shape = jax.ShapeDtypeStruct((M, N), jnp.int32)
+    out_specs = pl.BlockSpec((bm, bn), lambda i, j, k, cfg: (i, j))
+    if tile_hist:
+        hw = HIST_WIDTH(mult.bits)
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((grid[0], grid[1], 2, hw), jnp.int32)]
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, 1, 2, hw), lambda i, j, k, cfg: (i, j, 0, 0))]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -205,12 +268,12 @@ def ax_matmul_grid_pallas(
             pl.BlockSpec((bm, bk), lambda i, j, k, cfg: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k, cfg: (k, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, cfg: (i, j)),
+        out_specs=out_specs,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        out_shape=out_shape,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")

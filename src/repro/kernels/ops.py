@@ -1,4 +1,13 @@
-"""Jit'd public wrappers around the Pallas kernels."""
+"""Jit'd public wrappers around the Pallas kernels.
+
+This module is the supported kernel API surface (``repro.kernels``): each
+wrapper pins the static arguments (multiplier, block shapes, slab depth,
+histogram flag) into the jit key so repeated calls with the same
+configuration reuse one compiled program, while everything the adaptive
+runtime changes at run time — operands and per-tile swap-config grids —
+enters as ordinary traced arrays.  ``ref.py`` holds the bit-exact host
+oracles every wrapper is tested against.
+"""
 from __future__ import annotations
 
 import functools
@@ -25,7 +34,7 @@ __all__ = ["ax_matmul", "ax_matmul_dequant", "ax_matmul_grid", "component_sweep_
 @functools.partial(
     jax.jit,
     static_argnames=("mult", "swap", "block_m", "block_n", "block_k", "k_slab",
-                     "interpret"),
+                     "tile_hist", "interpret"),
 )
 def ax_matmul(
     a: jax.Array,
@@ -37,15 +46,25 @@ def ax_matmul(
     block_n: int = 128,
     block_k: int = 128,
     k_slab: Optional[int] = None,
+    tile_hist: bool = False,
     interpret: bool = True,
-) -> jax.Array:
+):
     """int8 x int8 -> int32 approximate matmul with fused SWAPPER.
+
+    ``(M, K) @ (K, N) -> (M, N)`` where every scalar product goes through
+    ``mult`` with the single-bit ``swap`` decision applied ahead of it.
     ``k_slab`` controls the vectorized reduction depth (None = auto,
-    1 = legacy rank-1 schedule)."""
+    1 = legacy rank-1 schedule).
+
+    ``tile_hist=True`` returns ``(out, hist)`` where ``hist`` is the
+    (M/block_m, N/block_n, 2, bits+1) int32 tile-local bit-occupancy
+    histogram accumulated inside the K reduction (bit-exact vs
+    ``ref.tile_hist_ref``; see ``runtime/telemetry.py`` for how the
+    adaptive controller consumes the per-tile statistic)."""
     return ax_matmul_pallas(
         a, b, mult, swap,
         block_m=block_m, block_n=block_n, block_k=block_k, k_slab=k_slab,
-        interpret=interpret,
+        tile_hist=tile_hist, interpret=interpret,
     )
 
 
@@ -76,7 +95,8 @@ def ax_matmul_dequant(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("mult", "block_m", "block_n", "block_k", "k_slab", "interpret"),
+    static_argnames=("mult", "block_m", "block_n", "block_k", "k_slab",
+                     "tile_hist", "interpret"),
 )
 def ax_matmul_grid(
     a: jax.Array,                 # (M, K) int8
@@ -88,15 +108,25 @@ def ax_matmul_grid(
     block_n: int = 128,
     block_k: int = 128,
     k_slab: Optional[int] = None,
+    tile_hist: bool = False,
     interpret: bool = True,
-) -> jax.Array:
-    """Approximate matmul with a per-output-tile SWAPPER config grid.  The
-    grid is a *traced* operand (scalar prefetch), so the adaptive runtime
-    re-tunes tile configs without triggering a recompile."""
+):
+    """Approximate matmul with a per-output-tile SWAPPER config grid.
+
+    ``cfg_grid[ti, tj]`` is the (op_is_a, bit, value) triple applied to
+    output tile (ti, tj); ``value == 2`` encodes NoSwap.  The grid is a
+    *traced* operand (scalar prefetch, SMEM-resident before the body runs),
+    so the adaptive runtime re-tunes tile configs — down to a different
+    triple per row tile — without triggering a recompile.
+
+    ``tile_hist=True`` returns ``(out, hist)`` with the same per-tile
+    bit-occupancy histogram as :func:`ax_matmul`: one dispatch both applies
+    the current per-tile policy and emits the per-tile operand statistics
+    the controller uses to compute the next one (the closed per-tile loop)."""
     return ax_matmul_grid_pallas(
         a, b, mult, cfg_grid,
         block_m=block_m, block_n=block_n, block_k=block_k, k_slab=k_slab,
-        interpret=interpret,
+        tile_hist=tile_hist, interpret=interpret,
     )
 
 

@@ -1,15 +1,17 @@
-"""Pure-jnp oracles for every Pallas kernel in this package."""
+"""Pure-jnp/numpy oracles for every Pallas kernel in this package."""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.multipliers import AxMult
 from repro.core.swapper import SwapConfig, apply_swapper, apply_swapper_dyn
 from repro.core.tuning import tile_stats_jnp
 
-__all__ = ["ax_matmul_ref", "ax_matmul_grid_ref", "tuning_sweep_ref"]
+__all__ = ["ax_matmul_ref", "ax_matmul_grid_ref", "tile_hist_ref",
+           "tuning_sweep_ref"]
 
 
 def ax_matmul_ref(a, b, mult: AxMult, swap: Optional[SwapConfig] = None):
@@ -39,6 +41,37 @@ def ax_matmul_grid_ref(a, b, mult: AxMult, cfg_grid):
             blocks.append(jnp.sum(prod, axis=1, dtype=jnp.int32))
         rows.append(jnp.concatenate(blocks, axis=1))
     return jnp.concatenate(rows, axis=0)
+
+
+def tile_hist_ref(a, b, bits: int, gm: int, gn: int) -> np.ndarray:
+    """Host oracle for the kernels' ``tile_hist`` second output: the
+    (gm, gn, 2, bits+1) int32 tile-local bit-occupancy histogram.
+
+    Output tile (ti, tj) reduces A rows ``[ti*bm, (ti+1)*bm)`` against B
+    columns ``[tj*bn, (tj+1)*bn)`` over the whole K dimension, so its
+    histogram counts every element of those operand tiles: per-position set
+    *magnitude* bits plus a trailing negative-sign count (row 0 = the A
+    tile, row 1 = the B tile).  The A histogram is therefore identical
+    across a row of output tiles and the B histogram across a column —
+    exactly what the kernel's per-(bm, bn)-tile accumulation produces."""
+    a = np.asarray(a, np.int64)
+    b = np.asarray(b, np.int64)
+    M, N = a.shape[0], b.shape[1]
+    assert M % gm == 0 and N % gn == 0, (a.shape, b.shape, gm, gn)
+    tm, tn = M // gm, N // gn
+
+    def counts(blk):
+        mag = np.abs(blk)
+        cnt = [int(((mag >> s) & 1).sum()) for s in range(bits)]
+        return np.asarray(cnt + [int((blk < 0).sum())], np.int32)
+
+    hist = np.zeros((gm, gn, 2, bits + 1), np.int32)
+    for ti in range(gm):
+        ca = counts(a[ti * tm:(ti + 1) * tm, :])
+        for tj in range(gn):
+            hist[ti, tj, 0] = ca
+            hist[ti, tj, 1] = counts(b[:, tj * tn:(tj + 1) * tn])
+    return hist
 
 
 def tuning_sweep_ref(mult: AxMult, a_vals, b_vals):

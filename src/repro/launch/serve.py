@@ -10,13 +10,20 @@ controller re-tunes the swap config in place — zero recompilations.  In
 ``--smoke`` mode a synthetic distribution drift is injected mid-generation
 (``--drift-at``) to exercise the loop end-to-end.
 
+``--tile-rows N`` (with ``--adaptive`` or ``--fleet``) switches the runtime
+to per-row-tile granularity: projections serve (N, 1, 3) swap-config grids,
+telemetry is collected per row tile, and tile-granular re-tunes publish
+``SwapPolicy.tile_grids`` — all with zero recompiles (see
+docs/architecture.md).
+
 ``--fleet N`` instead runs the mesh-native serving stack: an N-replica
 ("data",) mesh, the continuous-batching scheduler admitting variable-length
 synthetic requests into fixed-shape decode slots, one fused adaptive
 ``lax.scan`` dispatch per wave with in-graph (psum) telemetry aggregation,
 and re-tunes published through the versioned ``PolicyStore``
-(``--policy-store``).  On CPU, force replicas with
-``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+(``--policy-store``); each logical replica's ``PolicyReader`` staleness
+(store versions behind CURRENT) is reported at the end.  On CPU, force
+replicas with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
@@ -64,7 +71,8 @@ def _drift_hook(at_step: int, scale: float):
 def _run_fleet(args, cfg):
     """The mesh-native serving stack: fleet mesh + continuous batcher +
     policy store (see module docstring)."""
-    from repro.fleet import BatcherConfig, ContinuousBatcher, PolicyStore, Request
+    from repro.fleet import (BatcherConfig, ContinuousBatcher, PolicyReader,
+                             PolicyStore, Request)
     from repro.launch.mesh import make_fleet_mesh
     from repro.runtime import AdaptiveConfig, AdaptiveController, SwapPolicy
 
@@ -80,7 +88,8 @@ def _run_fleet(args, cfg):
     store = PolicyStore(args.policy_store)
     controller = AdaptiveController(
         SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
-        cfg=AdaptiveConfig(min_observe_steps=2, cooldown_steps=2), store=store,
+        cfg=AdaptiveConfig(min_observe_steps=2, cooldown_steps=2,
+                           tile_rows=args.tile_rows), store=store,
         log_fn=lambda line: print(f"[fleet] {line}"))
     resumed = controller.resume_from_store()
     print(f"[fleet] mesh={mesh.shape} slots={slots} store={store.root} "
@@ -93,6 +102,11 @@ def _run_fleet(args, cfg):
                          new_token_bucket=args.new_tokens,
                          temperature=args.temperature)
     bat = ContinuousBatcher(params, cfg, bcfg, adaptive=controller, mesh=mesh)
+    # one logical PolicyReader per replica: they adopt the policy current at
+    # spin-up and then surface the staleness metric (versions behind
+    # CURRENT) until their next poll — the fleet lag monitor
+    readers = [PolicyReader(store, cfg.ax.targets, tile_rows=args.tile_rows)
+               for _ in range(n)]
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         L = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
@@ -107,7 +121,17 @@ def _run_fleet(args, cfg):
           f"(incl. compile)")
     print(f"[fleet] {controller.telemetry.describe()}")
     print(f"[fleet] re-tunes: {len(controller.retunes)} "
+          f"tile re-tunes: {len(controller.tile_retunes)} "
           f"store v{store.current_version()} {controller.policy.describe()}")
+    stale = [r.staleness() for r in readers]
+    print("[fleet] replica staleness (versions behind CURRENT): "
+          + " ".join(f"r{i}=v{r.version}+{s}" for i, (r, s)
+                     in enumerate(zip(readers, stale))))
+    for r in readers:
+        r.poll()
+    print(f"[fleet] after poll: staleness="
+          f"{[r.staleness() for r in readers]} (all replicas adopted "
+          f"v{store.current_version()})")
 
 
 def main():
@@ -121,6 +145,10 @@ def main():
     ap.add_argument("--ax", action="store_true")
     ap.add_argument("--adaptive", action="store_true",
                     help="online SWAPPER runtime (telemetry + drift-triggered re-tune)")
+    ap.add_argument("--tile-rows", type=int, default=0, metavar="N",
+                    help="per-row-tile adaptation granularity (0 = scalar "
+                         "configs; N > 0 = N-row-tile config grids + tile "
+                         "telemetry, with --adaptive/--fleet)")
     ap.add_argument("--drift-at", type=int, default=None,
                     help="decode step at which to inject synthetic drift "
                          "(default: new_tokens//3 with --adaptive --smoke; -1 disables)")
@@ -156,7 +184,8 @@ def main():
         policy = SwapPolicy.from_ax_policy(cfg.ax)
         controller = AdaptiveController(
             policy, targets=cfg.ax.targets,
-            cfg=AdaptiveConfig(min_observe_steps=2, cooldown_steps=4),
+            cfg=AdaptiveConfig(min_observe_steps=2, cooldown_steps=4,
+                               tile_rows=args.tile_rows),
             log_fn=lambda line: print(f"[adaptive] {line}"),
         )
         controller.warmup()
@@ -194,6 +223,7 @@ def main():
     if controller is not None:
         print(f"[adaptive] {controller.telemetry.describe()}")
         print(f"[adaptive] re-tunes: {len(controller.retunes)} "
+              f"tile re-tunes: {len(controller.tile_retunes)} "
               f"final {controller.policy.describe()}")
         if args.policy_out:
             controller.policy.save(args.policy_out)

@@ -45,6 +45,9 @@ def main():
     ap.add_argument("--remat", default="none")
     ap.add_argument("--compress", default="none", choices=["none", "bf16"])
     ap.add_argument("--ax", action="store_true", help="SWAPPER approximate matmuls")
+    ap.add_argument("--tile-rows", type=int, default=0, metavar="N",
+                    help="per-row-tile adaptation granularity for --adaptive "
+                         "(0 = scalar configs)")
     ap.add_argument("--adaptive", action="store_true",
                     help="online adaptive SWAPPER (telemetry + drift re-tune)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
@@ -69,7 +72,8 @@ def main():
     stream = SyntheticStream(
         DataConfig(cfg.vocab, args.seq, args.batch, seed=0, mode="arith")
     )
-    step = jax.jit(make_train_step(cfg, par, opt, adaptive=args.adaptive),
+    step = jax.jit(make_train_step(cfg, par, opt, adaptive=args.adaptive,
+                                   tile_rows=args.tile_rows),
                    donate_argnums=(0,))
 
     if args.adaptive:
@@ -83,8 +87,11 @@ def main():
         # <ckpt_dir>/policy, and an elastic restart resumes the *adapted*
         # policy instead of reverting to the offline-tuned one
         store = PolicyStore(os.path.join(args.ckpt_dir, "policy"))
+        from repro.runtime import AdaptiveConfig
+
         controller = AdaptiveController(
             SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
+            cfg=AdaptiveConfig(tile_rows=args.tile_rows),
             log_fn=lambda line: print(f"[adaptive] {line}"), store=store,
         )
         if controller.resume_from_store():

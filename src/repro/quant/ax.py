@@ -42,6 +42,8 @@ import numpy as np
 from repro.configs.base import AxPolicy
 from repro.core import multipliers as M
 from repro.core.swapper import SwapConfig, apply_swapper_dyn
+from repro.core.tiling import (largest_divisor_leq, rowtile_count,
+                               rowtile_index, rowtile_span)
 
 __all__ = [
     "ax_dense",
@@ -115,13 +117,15 @@ def _int_mm(a, b):
     )
 
 
-def _stacked_mm(x1, y1, x2, y2):
-    """``X1 @ Y1 + X2 @ Y2`` as ONE int8 matmul over a concatenated 2K inner
-    dimension: ``[X1|X2] @ [Y1;Y2]``.  int32 accumulation is exact, so the
-    stacked reduction is bit-identical to the two-matmul sum while halving
-    the dispatch count (one MXU pass over 2K instead of two over K)."""
-    x = jnp.concatenate([x1, x2], axis=-1)
-    y = jnp.concatenate([y1, y2], axis=0)
+def _stacked_mm(*limbs):
+    """``sum_i Xi @ Yi`` as ONE int8 matmul over a concatenated inner
+    dimension: ``[X1|X2|...] @ [Y1;Y2;...]`` (``limbs`` alternates Xi, Yi).
+    int32 accumulation is exact, so the stacked reduction is bit-identical
+    to the matmul sum while collapsing the dispatch count to one (one MXU
+    pass over 2K for the scalar swap factorization, 4K for the per-row-tile
+    form)."""
+    x = jnp.concatenate(limbs[0::2], axis=-1)
+    y = jnp.concatenate(limbs[1::2], axis=0)
     return _int_mm(x, y)
 
 
@@ -141,10 +145,18 @@ def _mxu_limbs_dyn(ai, bi, f, g, op_is_a, bit, value):
 
     With row mask sa (decision on A) / column mask sb (decision on B), each
     gated by op_is_a, ``X1 @ Y1 + X2 @ Y2`` equals the A-form or B-form
-    static factorization for every triple.  ``value == 2`` (the NoSwap
-    encoding) zeroes sa and sb, which zeroes one limb entirely — the traced
-    NoSwap fast path: the compiled program stays config-agnostic and the
-    zero limb contributes nothing to the stacked reduction."""
+    static factorization for every triple.
+
+    The ``value == 2`` NoSwap limb-zeroing encoding: no int8 operand has a
+    bit equal to 2, so ``((x >> bit) & 1) == 2`` is identically False —
+    sa and sb collapse to all-zero masks, which zeroes one limb entirely
+    (``x1 = 0`` in the A form / ``y1 = 0`` in the B form) and reduces the
+    K-stacked product to the plain ``f(A) @ g(B)``.  That is the traced
+    NoSwap fast path: ONE compiled program is config-agnostic over all
+    4M+1 triples, and NoSwap rides it with a zero limb contributing nothing
+    to the stacked int32 reduction (bit-identical to the static NoSwap
+    matmul; a structured-sparsity backend could skip the zero limb — see
+    ROADMAP)."""
     is_a = op_is_a == 1
     sa = ((((ai >> bit) & 1) == value) & is_a).astype(jnp.int32)
     sb = ((((bi >> bit) & 1) == value) & ~is_a).astype(jnp.int32)
@@ -153,6 +165,114 @@ def _mxu_limbs_dyn(ai, bi, f, g, op_is_a, bit, value):
     x2 = jnp.where(is_a, (1 - sa) * f(ai), f(ai)).astype(jnp.int8)
     y2 = jnp.where(is_a, g(bi), (1 - sb) * g(bi)).astype(jnp.int8)
     return x1, y1, x2, y2
+
+
+def _mxu_limbs_rowtile(ai, bi, f, g, row_triples, b_rep):
+    """K-stacked limbs with a *per-row* swap decision (``row_triples`` is a
+    traced (M, 3) int32 array, one triple per row of the 2-D ``ai``;
+    ``b_rep`` the traced representative B-side triple — see
+    ``_bside_representative``).
+
+    Per-row decisions on the A operand are elementwise: the row's
+    (bit, value) broadcasts down its K lanes, so the A-form factorization
+    ``sa*g(A) @ f(B) + (1-sa)*f(A) @ g(B)`` holds row-wise.  Rows whose
+    triple is a NoSwap encoding (``value == 2``, either operand) zero
+    their slice of ``sa`` and ride the A-form pair (see
+    ``_mxu_limbs_dyn``).
+
+    A per-row *B-side* decision masks the weight operand, which cannot
+    vary per output row inside a factorized matmul — but a B-side decision
+    *shared by every B-side row* can: its column mask ``sb`` comes from the
+    representative triple and B-side rows are routed to a second limb pair
+    ``g(A) @ (sb*f(B)) + f(A) @ ((1-sb)*g(B))`` gated by a row indicator.
+    The four pairs stack into ONE int8 ``dot_general`` over a 4K inner
+    dimension, so the program stays single-dispatch and config-agnostic:
+    A-side / NoSwap / uniform-B-side grids are all exact (the broadcast of
+    any scalar config into a tile grid in particular).  The generality
+    costs a 4K inner dimension even when the grid is A-side-only and the
+    B-form limbs are runtime zeros — a deliberate correctness-first
+    tradeoff: a static "A-side-only" program variant would be silently
+    wrong the moment a B-side scalar config broadcasts into tile mode,
+    so selecting it needs a host-side guard (ROADMAP follow-on).  Grids
+    mixing
+    *different* B-side triples are the one inexpressible case — rejected
+    host-side by ``SwapPolicy.set_tile_grid``; the Pallas grid kernel
+    executes them when wanted (``backend='kernel'``).  The controller's
+    tile re-tune space (``controller.tile_triples``) is A-side/NoSwap only,
+    which keeps its published grids exact on every backend.
+    """
+    op = row_triples[:, 0:1]
+    bit = row_triples[:, 1:2]
+    value = row_triples[:, 2:3]
+    is_b = (op == 0) & (value <= 1)            # live B-side decision rows
+    sa = ((((ai >> bit) & 1) == value) & (op == 1)).astype(jnp.int32)
+    ib = is_b.astype(jnp.int32)
+    ia = 1 - ib                                # A-side AND NoSwap rows
+    sb = (((bi >> b_rep[1]) & 1) == b_rep[2]).astype(jnp.int32)
+    return ((sa * g(ai)).astype(jnp.int8), f(bi).astype(jnp.int8),
+            (ia * (1 - sa) * f(ai)).astype(jnp.int8), g(bi).astype(jnp.int8),
+            (ib * g(ai)).astype(jnp.int8), (sb * f(bi)).astype(jnp.int8),
+            (ib * f(ai)).astype(jnp.int8), ((1 - sb) * g(bi)).astype(jnp.int8))
+
+
+def _bside_representative(flat_triples):
+    """The (traced) B-side triple of a tile grid: ``set_tile_grid``
+    guarantees at most one distinct B-side triple per grid, so the first
+    B-side row is THE representative wherever it sits (grids with no
+    B-side rows return an arbitrary row — its mask is then gated out by
+    the all-zero ``ib`` indicator)."""
+    is_b = (flat_triples[:, 0] == 0) & (flat_triples[:, 2] <= 1)
+    return flat_triples[jnp.argmax(is_b)]
+
+
+def _block_of(span: int, cap: int = 128) -> int:
+    """Kernel block size aligned to a logical tile span, so no block
+    straddles a tile."""
+    return largest_divisor_leq(span, cap)
+
+
+def _kernel_grid_tiled(a_i8, b_i8, mult, dyn):
+    """Pallas grid-kernel dispatch of a logical (gm, gn, 3) config grid.
+
+    The scalar-prefetch kernel applies one triple per *physical* block, so
+    the block shape is chosen to align with the logical tile spans
+    (``_block_of``: each block lies inside exactly one logical tile) and
+    the logical grid is gathered onto the block grid with static indices —
+    bit-exact per-tile semantics at any granularity, still zero recompiles
+    across grid-value updates.  On a real TPU a production deployment picks
+    ``gm`` so the tile span stays a multiple of the 128-lane MXU block (the
+    alignment here then reduces to the default blocks)."""
+    from repro.kernels import ax_matmul_grid
+
+    lead = a_i8.shape[:-1]
+    a2d = a_i8.reshape(-1, a_i8.shape[-1])
+    m0, k0 = a2d.shape
+    n0 = b_i8.shape[-1]
+    g_m = rowtile_count(m0, int(dyn.shape[0]))
+    g_n = rowtile_count(n0, int(dyn.shape[1]))
+    rows_per = rowtile_span(m0, int(dyn.shape[0]))
+    cols_per = rowtile_span(n0, int(dyn.shape[1]))
+    bm, bn, bk = _block_of(rows_per), _block_of(cols_per), min(128, k0)
+    a2d = _pad_to_multiple(_pad_to_multiple(a2d, bm, 0), bk, 1)
+    bp = _pad_to_multiple(_pad_to_multiple(b_i8, bk, 0), bn, 1)
+    gmk, gnk = a2d.shape[0] // bm, bp.shape[1] // bn
+    ri = np.minimum((np.arange(gmk) * bm) // rows_per, g_m - 1)
+    ci = np.minimum((np.arange(gnk) * bn) // cols_per, g_n - 1)
+    grid = dyn.astype(jnp.int32)[ri][:, ci]
+    out = ax_matmul_grid(a2d, bp, mult, grid, block_m=bm, block_n=bn, block_k=bk)
+    return out[:m0, :n0].reshape(*lead, n0)
+
+
+def _pad_to_multiple(v, mult_, axis):
+    """Zero-pad ``v`` along ``axis`` up to the next multiple of ``mult_``
+    (the Pallas kernels require block-divisible shapes; callers crop the
+    output back)."""
+    pad = (-v.shape[axis]) % mult_
+    if pad == 0:
+        return v
+    widths = [(0, 0)] * v.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(v, widths)
 
 
 def _pad_for_kernel(a_i8, b_i8):
@@ -164,17 +284,8 @@ def _pad_for_kernel(a_i8, b_i8):
     m0, k0 = a2d.shape
     n0 = b_i8.shape[-1]
     bm, bn, bk = min(128, m0), min(128, n0), min(128, k0)
-
-    def _pad(v, mult_, axis):
-        pad = (-v.shape[axis]) % mult_
-        if pad == 0:
-            return v
-        widths = [(0, 0)] * v.ndim
-        widths[axis] = (0, pad)
-        return jnp.pad(v, widths)
-
-    a2d = _pad(_pad(a2d, bm, 0), bk, 1)
-    bp = _pad(_pad(b_i8, bk, 0), bn, 1)
+    a2d = _pad_to_multiple(_pad_to_multiple(a2d, bm, 0), bk, 1)
+    bp = _pad_to_multiple(_pad_to_multiple(b_i8, bk, 0), bn, 1)
     return a2d, bp, lead, m0, n0, (bm, bn, bk)
 
 
@@ -230,37 +341,81 @@ def ax_matmul_int_2mm(a_i8, b_i8, policy: AxPolicy) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def ax_matmul_int_dyn(a_i8, b_i8, policy: AxPolicy, dyn) -> jax.Array:
-    """``ax_matmul_int`` with the swap decision as a traced (op_is_a, bit,
-    value) int32 triple, so the adaptive controller can re-tune a serving
-    step without recompiling it (value=2 encodes NoSwap).
+    """``ax_matmul_int`` with the swap decision as a *traced* int32 input,
+    so the adaptive controller can re-tune a serving step without
+    recompiling it.  ``dyn`` is either
 
-    The mxu backend dispatches the factorization limbs of ``_mxu_limbs_dyn``
-    as one K-stacked int8 matmul — bit-identical to the static path for
-    every triple, still MXU-rate, and exactly one ``dot_general`` in the
-    compiled step regardless of the traced config (NoSwap rides the same
-    program with a zeroed limb)."""
+    * a (3,) (op_is_a, bit, value) triple — one decision for the whole
+      projection (value=2 encodes NoSwap; see ``_mxu_limbs_dyn`` for the
+      limb-zeroing encoding), or
+    * a (gm, gn, 3) per-tile config grid (``SwapPolicy.tile_grid``) — the
+      gm row tiles of the flattened token dimension each apply their own
+      triple.  The grid is resampled to each backend's physical tiling with
+      *static* indices, so tile-grid updates stay zero-recompile.
+
+    Backends: mxu dispatches ONE K-stacked int8 ``dot_general`` for every
+    scalar triple and for per-row-tile grids (A-side/NoSwap per tile; see
+    ``_mxu_limbs_rowtile`` — gn must be 1); ``kernel`` routes the
+    scalar-prefetch Pallas grid kernel (fully general grids); ``emul`` is
+    the pure-jnp reference for both."""
     mult = M.get(policy.mult_name)
-    op_is_a, bit, value = dyn[0], dyn[1], dyn[2]
+    dyn = jnp.asarray(dyn)
+    tiled = dyn.ndim == 3
     if policy.backend == "mxu":
         sep = separable_transforms(policy.mult_name)
         assert sep is not None, f"{policy.mult_name} is not separable; use backend='kernel'"
         f, g = sep
         ai = a_i8.astype(jnp.int32)
         bi = b_i8.astype(jnp.int32)
-        return _stacked_mm(*_mxu_limbs_dyn(ai, bi, f, g, op_is_a, bit, value))
+        if tiled:
+            assert dyn.shape[1] == 1, (
+                f"mxu per-tile grids are row-granular (gn must be 1, got "
+                f"{dyn.shape}); use backend='kernel' for column tiles")
+            lead = a_i8.shape[:-1]
+            a2 = ai.reshape(-1, ai.shape[-1])
+            row_triples = dyn[:, 0, :][rowtile_index(a2.shape[0], dyn.shape[0])]
+            out = _stacked_mm(*_mxu_limbs_rowtile(
+                a2, bi, f, g, row_triples, _bside_representative(dyn[:, 0, :])))
+            return out.reshape(*lead, b_i8.shape[-1])
+        return _stacked_mm(*_mxu_limbs_dyn(ai, bi, f, g, dyn[0], dyn[1], dyn[2]))
     if policy.backend == "kernel":
         from repro.kernels import ax_matmul_grid
 
+        if tiled:
+            return _kernel_grid_tiled(a_i8, b_i8, mult, dyn)
         a2d, bp, lead, m0, n0, (bm, bn, bk) = _pad_for_kernel(a_i8, b_i8)
-        gm, gn = a2d.shape[0] // bm, bp.shape[1] // bn
-        grid = jnp.broadcast_to(jnp.asarray(dyn, jnp.int32), (gm, gn, 3))
+        gmk, gnk = a2d.shape[0] // bm, bp.shape[1] // bn
+        grid = jnp.broadcast_to(dyn.astype(jnp.int32), (gmk, gnk, 3))
         out = ax_matmul_grid(a2d, bp, mult, grid, block_m=bm, block_n=bn, block_k=bk)
         return out[:m0, :n0].reshape(*lead, n0)
     # 'emul'
     lead = a_i8.shape[:-1]
-    A = a_i8.reshape(-1, a_i8.shape[-1]).astype(jnp.int32)[:, :, None]
-    B = b_i8.astype(jnp.int32)[None, :, :]
-    prod = apply_swapper_dyn(mult, A, B, op_is_a, bit, value).astype(jnp.int32)
+    a2 = a_i8.reshape(-1, a_i8.shape[-1]).astype(jnp.int32)
+    B = b_i8.astype(jnp.int32)
+    if tiled:
+        Mrows, N = a2.shape[0], b_i8.shape[-1]
+        ri = rowtile_index(Mrows, dyn.shape[0])
+        ci = rowtile_index(N, dyn.shape[1])
+        rows = []
+        for ti in range(int(dyn.shape[0])):
+            sel = np.nonzero(ri == ti)[0]
+            if len(sel) == 0:
+                continue
+            A = a2[sel[0]:sel[-1] + 1][:, :, None]
+            blocks = []
+            for tj in range(int(dyn.shape[1])):
+                cs = np.nonzero(ci == tj)[0]
+                if len(cs) == 0:
+                    continue
+                t = dyn[ti, tj]
+                prod = apply_swapper_dyn(
+                    mult, A, B[None, :, cs[0]:cs[-1] + 1], t[0], t[1], t[2])
+                blocks.append(jnp.sum(prod.astype(jnp.int32), axis=1,
+                                      dtype=jnp.int32))
+            rows.append(jnp.concatenate(blocks, axis=1))
+        return jnp.concatenate(rows, axis=0).reshape(*lead, N)
+    prod = apply_swapper_dyn(mult, a2[:, :, None], B[None, :, :],
+                             dyn[0], dyn[1], dyn[2]).astype(jnp.int32)
     return jnp.sum(prod, axis=1, dtype=jnp.int32).reshape(*lead, b_i8.shape[-1])
 
 
@@ -325,17 +480,17 @@ def _ax_dense_dyn_core(x, w, policy: AxPolicy, dyn, xq, sx, wq, sw):
 
 
 def _ax_dense_dyn_fwd(x, w, policy, dyn, xq, sx, wq, sw):
-    return _ax_dense_dyn_core(x, w, policy, dyn, xq, sx, wq, sw), (x, w)
+    return _ax_dense_dyn_core(x, w, policy, dyn, xq, sx, wq, sw), (x, w, dyn.shape)
 
 
 def _ax_dense_dyn_bwd(policy, res, gy):
-    x, w = res
-    gx, gw = _ax_dense_bwd(policy, res, gy)
-    # integer inputs (config triple, int8 operands): symbolic-zero (float0)
-    # cotangents; the f32 quantization scales get literal zeros (STE ignores
-    # the quantization path entirely)
+    x, w, dyn_shape = res
+    gx, gw = _ax_dense_bwd(policy, res[:2], gy)
+    # integer inputs (config triple/grid, int8 operands): symbolic-zero
+    # (float0) cotangents; the f32 quantization scales get literal zeros
+    # (STE ignores the quantization path entirely)
     f0 = jax.dtypes.float0
-    return (gx, gw, np.zeros((3,), f0),
+    return (gx, gw, np.zeros(dyn_shape, f0),
             np.zeros(x.shape, f0), jnp.zeros(x.shape[:-1] + (1,), jnp.float32),
             np.zeros(w.shape, f0), jnp.zeros((1, w.shape[-1]), jnp.float32))
 
@@ -344,17 +499,35 @@ _ax_dense_dyn_core.defvjp(_ax_dense_dyn_fwd, _ax_dense_dyn_bwd)
 
 
 def ax_dense_dyn(x, w, policy: AxPolicy, dyn, scope=None, target: str = ""):
-    """``ax_dense`` with a traced swap triple (adaptive runtime path); when a
-    collecting scope is open, also emits the telemetry record for this call.
-    ``quantize_rows`` runs once here and its results feed both the telemetry
-    summary and the matmul core explicitly (no reliance on XLA CSE).  The
-    scope's traced observe gate (if any) lets off-steps skip the summary
-    compute entirely (``lax.cond``) while keeping the record shapes static."""
+    """``ax_dense`` with the swap decision as a traced input (adaptive
+    runtime path): ``dyn`` is a (3,) triple, or a (gm, 1, 3) per-row-tile
+    grid when the scope runs in tile mode (``ax_matmul_int_dyn`` handles
+    both with zero recompiles on value changes).
+
+    When a collecting scope is open this also emits the telemetry records
+    for the call: the scalar ``operand_summary`` (its live-policy error
+    sample uses the first tile's triple when ``dyn`` is a grid — the bit
+    statistics are policy-independent), plus a per-row-tile
+    ``tile_summary`` under ``tile_key(target)`` when ``scope.tile_rows``
+    is set — the feed of the controller's per-tile re-tune path.
+
+    ``quantize_rows`` runs once here and its results feed both the
+    telemetry summaries and the matmul core explicitly (no reliance on XLA
+    CSE).  The scope's traced observe gate (if any) lets off-steps skip the
+    summary compute entirely (``lax.cond``) while keeping record shapes
+    static."""
     xq, sx = quantize_rows(x.astype(jnp.float32), axis=-1)
     wq, sw = quantize_rows(w.astype(jnp.float32), axis=0)
+    dyn = jnp.asarray(dyn)
     if scope is not None and scope.collect:
-        from repro.runtime.telemetry import operand_summary
+        from repro.runtime.telemetry import operand_summary, tile_key, tile_summary
 
-        scope.record(target, operand_summary(xq, wq, M.get(policy.mult_name),
-                                             dyn, gate=scope.gate))
+        mult = M.get(policy.mult_name)
+        dyn_rep = dyn if dyn.ndim == 1 else dyn[0, 0]
+        scope.record(target, operand_summary(xq, wq, mult, dyn_rep,
+                                             gate=scope.gate))
+        if scope.tile_rows > 0:
+            scope.record(tile_key(target),
+                         tile_summary(xq, wq, mult, scope.tile_rows,
+                                      gate=scope.gate))
     return _ax_dense_dyn_core(x, w, policy, dyn, xq, sx, wq, sw)

@@ -15,36 +15,60 @@ reduction claim:
   controller — drift-triggered incremental re-tune: one vmapped jitted call
                scores NoSwap + all 4M configs over buffered live operands
 """
-from .controller import AdaptiveConfig, AdaptiveController, RetuneEvent, all_triples
+from .controller import (
+    AdaptiveConfig,
+    AdaptiveController,
+    RetuneEvent,
+    TileRetuneEvent,
+    all_triples,
+    tile_triples,
+)
 from .drift import DriftConfig, DriftDetector, drift_score
-from .policy import NO_SWAP_TRIPLE, SwapPolicy, triple_of
+from .policy import NO_SWAP_TRIPLE, SwapPolicy, triple_of, triple_short
 from .scope import AxRuntimeScope, active_scope, ax_scope, fallback_chain
 from .telemetry import (
     RETUNE_SAMPLE,
     TELEMETRY_SAMPLE,
+    TILE_RETUNE_SAMPLE,
+    TILE_TELEMETRY_SAMPLE,
     TargetTelemetry,
+    TargetTileTelemetry,
     Telemetry,
+    base_target,
+    is_tile_key,
     operand_summary,
+    tile_key,
+    tile_summary,
 )
 
 __all__ = [
     "AdaptiveConfig",
     "AdaptiveController",
     "RetuneEvent",
+    "TileRetuneEvent",
     "all_triples",
+    "tile_triples",
     "DriftConfig",
     "DriftDetector",
     "drift_score",
     "NO_SWAP_TRIPLE",
     "SwapPolicy",
     "triple_of",
+    "triple_short",
     "AxRuntimeScope",
     "active_scope",
     "ax_scope",
     "fallback_chain",
     "Telemetry",
     "TargetTelemetry",
+    "TargetTileTelemetry",
     "operand_summary",
+    "tile_summary",
+    "tile_key",
+    "is_tile_key",
+    "base_target",
     "TELEMETRY_SAMPLE",
     "RETUNE_SAMPLE",
+    "TILE_TELEMETRY_SAMPLE",
+    "TILE_RETUNE_SAMPLE",
 ]

@@ -26,16 +26,31 @@ from repro.core.metrics import abs_err
 from repro.core.swapper import SwapConfig, all_configs, apply_swapper_dyn
 
 from .drift import DriftConfig, DriftDetector
-from .policy import NO_SWAP_TRIPLE, SwapPolicy, triple_of
-from .telemetry import Telemetry, operand_summary
+from .policy import NO_SWAP_TRIPLE, SwapPolicy, triple_of, triple_short
+from .telemetry import (Telemetry, base_target, is_tile_key, operand_summary,
+                        tile_key, tile_summary)
 
-__all__ = ["AdaptiveConfig", "RetuneEvent", "AdaptiveController", "all_triples"]
+__all__ = ["AdaptiveConfig", "RetuneEvent", "TileRetuneEvent",
+           "AdaptiveController", "all_triples", "tile_triples"]
 
 
 def all_triples(bits: int) -> np.ndarray:
     """(4M+1, 3) int32 sweep space: NoSwap first, then every single-bit
     config in ``all_configs`` order."""
     rows = [NO_SWAP_TRIPLE] + [triple_of(c) for c in all_configs(bits)]
+    return np.asarray(rows, np.int32)
+
+
+def tile_triples(bits: int) -> np.ndarray:
+    """(2M+1, 3) int32 per-row-tile sweep space: NoSwap first, then every
+    A-side single-bit config.  Row tiles partition the *A* (activation)
+    operand, so the decision that can vary per row tile is A's; B-side
+    decisions mask the weight operand shared by every row tile, which the
+    single-dispatch mxu factorization cannot vary per output row (see
+    ``quant.ax._mxu_limbs_rowtile``).  Restricting the tile sweep to this
+    family keeps published tile grids backend-portable."""
+    rows = [NO_SWAP_TRIPLE] + [triple_of(c) for c in all_configs(bits)
+                               if c.operand == "A"]
     return np.asarray(rows, np.int32)
 
 
@@ -57,11 +72,28 @@ def _score_configs(mult, a, b, triples, metric: str = "mae"):
     return jax.vmap(one)(triples)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _score_configs_tiled(mult, a_tiles, b_tiles, triples, metric: str = "mae"):
+    """(gm, n_triples) mean error of every candidate triple over each row
+    tile's operand sample — the whole per-tile sweep is one vmapped call of
+    the scalar scorer, so tile re-tunes stay zero-recompile after warm-up."""
+    return jax.vmap(
+        lambda a, b: _score_configs(mult, a, b, triples, metric)
+    )(a_tiles, b_tiles)
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def _summarize_pair(mult, a, b, dyn):
     """Telemetry record for a raw operand pair stream (benchmarks/tests feed
     the controller without a serving engine)."""
     return operand_summary(a, b, mult, dyn)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _summarize_pair_tiled(mult, a, b, dyn, gm: int):
+    """Scalar + per-row-tile records for a raw 2-D operand stream (``a``
+    rows are the tiled dimension)."""
+    return operand_summary(a, b, mult, dyn), tile_summary(a, b, mult, gm)
 
 
 @dataclasses.dataclass
@@ -72,6 +104,12 @@ class AdaptiveConfig:
     cooldown_steps: int = 4        # steps between re-tunes (buffer refresh time)
     buffer_size: int = 2048        # per-target operand ring-buffer elements
     metric: str = "mae"            # re-tune objective
+    # per-row-tile adaptation: 0 = off; N > 0 = collect tile telemetry and
+    # serve per-row-tile config grids at N row tiles per projection (drift
+    # confined to one tile reaches the detector diluted by ~1/N — scale
+    # drift_threshold accordingly, as with the fleet's 1/N shard dilution)
+    tile_rows: int = 0
+    tile_buffer_size: int = 512    # per-(target, tile) operand ring buffer
 
 
 @dataclasses.dataclass
@@ -89,6 +127,25 @@ class RetuneEvent:
         return (f"retune[{self.target}] step={self.step} drift={self.drift:.3f} "
                 f"{fmt(self.old)} ({self.old_score:.2f}) -> "
                 f"{fmt(self.new)} ({self.new_score:.2f})")
+
+
+@dataclasses.dataclass
+class TileRetuneEvent:
+    """One per-row-tile re-tune: the controller scored every candidate in
+    ``tile_triples`` per row tile and published the winning grid."""
+
+    step: int
+    target: str
+    drift: float
+    grid: np.ndarray               # (gm, 1, 3) published tile grid
+    old_score: float               # mean over tiles, incumbent per-tile cfg
+    new_score: float               # mean over tiles, winning per-tile cfg
+
+    def describe(self) -> str:
+        cfgs = ",".join(triple_short(t) for t in self.grid[:, 0, :])
+        return (f"tile-retune[{self.target}] step={self.step} "
+                f"drift={self.drift:.3f} -> ({cfgs}) "
+                f"({self.old_score:.2f} -> {self.new_score:.2f})")
 
 
 class _RingBuffer:
@@ -150,12 +207,24 @@ class AdaptiveController:
             t: _RingBuffer(self.cfg.buffer_size) for t in self.targets
         }
         self.triples = jnp.asarray(all_triples(self.mult.bits))
+        # per-row-tile state (cfg.tile_rows > 0): one ring buffer per
+        # (target, row tile), created lazily at the granularity the first
+        # tile record reports (min(tile_rows, projection rows))
+        self.tile_sweep = jnp.asarray(tile_triples(self.mult.bits))
+        self.tile_buffers: Dict[str, List[_RingBuffer]] = {}
+        self.tile_retunes: List[TileRetuneEvent] = []
         self.step = 0
         self._dyn_cache = None            # (policy.version, built tree)
         self._last_retune_step = -(10 ** 9)
         self.retunes: List[RetuneEvent] = []
         self.log: List[str] = []
         self._log_fn = log_fn
+
+    @property
+    def tile_rows(self) -> int:
+        """Per-row-tile granularity the serving engine should open scopes
+        with (0 = scalar mode); mirrored by ``fleet.PolicyReader``."""
+        return self.cfg.tile_rows
 
     # -- plumbing ------------------------------------------------------
     def _emit(self, line: str) -> None:
@@ -164,13 +233,15 @@ class AdaptiveController:
             self._log_fn(line)
 
     def dyn_tree(self) -> Dict[str, jnp.ndarray]:
-        """Traced-input triples for the serving/training step (stable pytree
-        structure: policy updates change values only, never keys).  Cached on
-        the policy version so the per-step hot path pays no rebuild between
-        re-tunes."""
+        """Traced-input triples — or (tile_rows, 1, 3) per-row-tile grids in
+        tile mode — for the serving/training step (stable pytree structure
+        AND leaf shapes: policy updates, including tile-grid publishes,
+        change values only).  Cached on the policy version so the per-step
+        hot path pays no rebuild between re-tunes."""
         if self._dyn_cache is None or self._dyn_cache[0] != self.policy.version:
             self._dyn_cache = (self.policy.version,
-                               self.policy.dyn_tree(self.targets))
+                               self.policy.dyn_tree(self.targets,
+                                                    self.cfg.tile_rows))
         return self._dyn_cache[1]
 
     def adopt(self, policy: SwapPolicy) -> None:
@@ -213,11 +284,17 @@ class AdaptiveController:
             self.cfg.drift_threshold = threshold
 
     def warmup(self) -> None:
-        """Pre-compile the re-tune scorer so later re-tunes cost zero
-        compilations (verified in tests via the jit cache size)."""
+        """Pre-compile the re-tune scorers (scalar, and per-tile when tile
+        mode is on) so later re-tunes cost zero compilations (verified in
+        tests via the jit cache size)."""
         zeros = jnp.zeros(self.cfg.buffer_size, jnp.int32)
         _score_configs(self.mult, zeros, zeros, self.triples,
                        self.cfg.metric).block_until_ready()
+        if self.cfg.tile_rows > 0:
+            tz = jnp.zeros((self.cfg.tile_rows, self.cfg.tile_buffer_size),
+                           jnp.int32)
+            _score_configs_tiled(self.mult, tz, tz, self.tile_sweep,
+                                 self.cfg.metric).block_until_ready()
 
     def scorer_cache_size(self) -> int:
         return _score_configs._cache_size()
@@ -225,10 +302,16 @@ class AdaptiveController:
     # -- observation ---------------------------------------------------
     def observe(self, records: Dict[str, Dict[str, np.ndarray]]) -> List[str]:
         """Fold one step's scope-collected telemetry in; re-tune on drift.
-        Returns the log lines emitted for this step."""
+        Records keyed ``<target>@tiles`` feed the per-row-tile loop (tile
+        accumulators + per-tile ring buffers; drift on them triggers
+        :meth:`retune_tiles`).  Returns the log lines emitted for this
+        step."""
         mark = len(self.log)
         self.telemetry.update(records)
         for target, rec in records.items():
+            if is_tile_key(target):
+                self._tile_buffer_add(base_target(target), rec)
+                continue
             buf = self.buffers.get(target)
             if buf is not None:
                 buf.add(rec["a_smp"], rec["b_smp"])
@@ -237,16 +320,42 @@ class AdaptiveController:
         if self.step - self._last_retune_step > self.cfg.cooldown_steps:
             drifted = self.detector.check(self.telemetry.snapshot())
             for target, score in drifted:
-                if target in self.buffers:
+                if is_tile_key(target):
+                    if base_target(target) in self.tile_buffers:
+                        self.retune_tiles(base_target(target), drift=score)
+                elif target in self.buffers:
                     self.retune(target, drift=score)
         return self.log[mark:]
 
+    def _tile_buffer_add(self, target: str, rec: Dict[str, np.ndarray]) -> None:
+        """Refresh the per-(target, tile) ring buffers from a stacked tile
+        record (samples are (ncalls, S, gm) — tiles on the last axis)."""
+        a = np.asarray(rec["tile_a_smp"])
+        b = np.asarray(rec["tile_b_smp"])
+        gm = a.shape[-1]
+        bufs = self.tile_buffers.get(target)
+        if bufs is None or len(bufs) != gm:
+            bufs = self.tile_buffers[target] = [
+                _RingBuffer(self.cfg.tile_buffer_size) for _ in range(gm)]
+        for t in range(gm):
+            bufs[t].add(a[..., t].reshape(-1), b[..., t].reshape(-1))
+
     def observe_operands(self, target: str, a, b) -> List[str]:
         """Feed a raw int operand pair batch (no engine required); used by
-        benchmarks and synthetic drift streams."""
+        benchmarks and synthetic drift streams.  In tile mode a 2-D ``a``
+        also produces the per-row-tile record (rows are the tiled dim)."""
         dyn = jnp.asarray(triple_of(self.policy.lookup(target)), jnp.int32)
-        rec = jax.device_get(_summarize_pair(self.mult, jnp.asarray(a),
-                                             jnp.asarray(b), dyn))
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if self.cfg.tile_rows > 0 and a.ndim >= 2:
+            rec, trec = jax.device_get(_summarize_pair_tiled(
+                self.mult, a, b, dyn, self.cfg.tile_rows))
+            return self.observe({
+                target: {k: np.asarray(v)[None] for k, v in rec.items()},
+                tile_key(target): {k: np.asarray(v)[None]
+                                   for k, v in trec.items()},
+            })
+        rec = jax.device_get(_summarize_pair(self.mult, a, b, dyn))
         stacked = {k: np.asarray(v)[None] for k, v in rec.items()}
         return self.observe({target: stacked})
 
@@ -271,6 +380,51 @@ class AdaptiveController:
         ev = RetuneEvent(self.step, target, drift, old, new,
                          float(scores[old_idx]), float(scores[best]))
         self.retunes.append(ev)
+        self._emit(ev.describe())
+        if self.store is not None:
+            v = self.store.publish(self.policy)
+            self._emit(f"published policy v{v}")
+        return ev
+
+    def retune_tiles(self, target: str, drift: float = 0.0) -> TileRetuneEvent:
+        """Per-row-tile re-tune of one target: ONE vmapped call scores the
+        backend-portable candidate family (NoSwap + every A-side config,
+        ``tile_triples``) over every tile's live operand buffer, and the
+        per-tile winners are published as the target's
+        ``SwapPolicy.tile_grids`` entry — which serve replicas adopt with
+        zero recompiles exactly like scalar configs (grids enter compiled
+        steps as traced int32 values)."""
+        bufs = self.tile_buffers[target]
+        gm = len(bufs)
+        a_tiles = np.stack([b.operands()[0] for b in bufs])
+        b_tiles = np.stack([b.operands()[1] for b in bufs])
+        scores = np.asarray(_score_configs_tiled(
+            self.mult, jnp.asarray(a_tiles), jnp.asarray(b_tiles),
+            self.tile_sweep, self.cfg.metric))          # (gm, 2M+1)
+        best = np.argmin(scores, axis=1)                # per-tile winner
+        sweep = np.asarray(self.tile_sweep)
+        grid = sweep[best][:, None, :]                  # (gm, 1, 3)
+
+        # incumbent per-tile score (for the event log): the currently
+        # published grid resampled to this granularity, mapped into the
+        # tile sweep (B-side incumbents fall back to NoSwap = index 0,
+        # matching their per-row-tile execution semantics)
+        old_grid = self.policy.tile_grid(target, gm, 1)
+        old_idx = np.zeros(gm, np.int64)
+        for t in range(gm):
+            hit = np.nonzero((sweep == old_grid[t, 0]).all(1))[0]
+            old_idx[t] = hit[0] if len(hit) else 0
+        old_score = float(np.mean(scores[np.arange(gm), old_idx]))
+        new_score = float(np.mean(scores[np.arange(gm), best]))
+
+        self.policy.set_tile_grid(target, grid)
+        snap = self.telemetry.snapshot().get(tile_key(target))
+        if snap is not None and snap.get("bit_probs") is not None:
+            self.detector.rebase(tile_key(target), snap["bit_probs"])
+        self._last_retune_step = self.step
+        ev = TileRetuneEvent(self.step, target, drift, grid,
+                             old_score, new_score)
+        self.tile_retunes.append(ev)
         self._emit(ev.describe())
         if self.store is not None:
             v = self.store.publish(self.policy)

@@ -49,9 +49,13 @@ class DriftDetector:
     def score(self, target: str, bit_probs: Optional[np.ndarray]) -> float:
         if bit_probs is None:
             return 0.0
+        bit_probs = np.asarray(bit_probs)
         ref = self.reference.get(target)
-        if ref is None:
-            # first sighting: adopt as reference, no drift yet
+        if ref is None or ref.shape != bit_probs.shape:
+            # first sighting — or the statistic changed shape (a per-tile
+            # target whose tile count follows the call's row count, e.g. a
+            # different batch size): the old reference is not comparable,
+            # adopt the new snapshot and restart the warm-up
             self.rebase(target, bit_probs)
             return 0.0
         self._steps_since_rebase[target] = self._steps_since_rebase.get(target, 0) + 1

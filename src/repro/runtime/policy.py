@@ -28,7 +28,7 @@ from repro.core.swapper import NO_SWAP_TRIPLE, SwapConfig, cfg_to_triple
 
 from .scope import GLOBAL_KEY, fallback_chain
 
-__all__ = ["SwapPolicy", "triple_of", "NO_SWAP_TRIPLE"]
+__all__ = ["SwapPolicy", "triple_of", "triple_short", "NO_SWAP_TRIPLE"]
 
 # the triple encoding is owned by core.swapper; re-exported here for the
 # runtime-facing API surface
@@ -40,6 +40,14 @@ def _cfg_from_triple(t) -> Optional[SwapConfig]:
     if value not in (0, 1):
         return None
     return SwapConfig("A" if op_is_a else "B", bit, value)
+
+
+def triple_short(t) -> str:
+    """Canonical compact rendering of one (op_is_a, bit, value) triple —
+    ``"ns"`` for the NoSwap encoding, else ``"A[b]==v"`` / ``"B[b]==v"``.
+    The single formatter shared by policy/controller/benchmark output."""
+    cfg = _cfg_from_triple(t)
+    return "ns" if cfg is None else cfg.short()
 
 
 @dataclasses.dataclass
@@ -63,29 +71,67 @@ class SwapPolicy:
         self.configs[key] = cfg
         self.version += 1
 
-    def dyn_tree(self, keys: Sequence[str]) -> Dict[str, jnp.ndarray]:
-        """Per-key traced-input triples for ``runtime.scope.ax_scope``.  The
-        tree structure (keys) is fixed by the caller so the jit cache stays
-        warm across policy updates — only the int32 values change."""
+    def dyn_tree(self, keys: Sequence[str],
+                 tile_rows: int = 0) -> Dict[str, jnp.ndarray]:
+        """Per-key traced-input values for ``runtime.scope.ax_scope``.
+
+        ``tile_rows == 0`` (scalar mode): each key maps to its resolved
+        (op_is_a, bit, value) int32 triple.  ``tile_rows > 0`` (per-tile
+        mode): each key maps to a (tile_rows, 1, 3) int32 per-row-tile grid
+        — stored ``tile_grids`` resampled to that shape, keys without a
+        stored grid broadcast their scalar config (see :meth:`tile_grid`).
+
+        Either way the tree structure (keys) AND the leaf shapes are fixed
+        by the caller's ``(keys, tile_rows)``, so the jit cache stays warm
+        across policy updates — re-tunes, including tile-grid publishes,
+        change int32 values only."""
+        if tile_rows > 0:
+            return {k: jnp.asarray(self.tile_grid(k, tile_rows, 1), jnp.int32)
+                    for k in keys}
         return {
             k: jnp.asarray(triple_of(self.lookup(k)), jnp.int32) for k in keys
         }
 
     # -- per-row-tile grids -------------------------------------------
     def set_tile_grid(self, key: str, grid: np.ndarray) -> None:
+        """Install a (gm, gn, 3) int32 per-tile config grid for ``key``
+        (bumps the policy version like :meth:`set_config`).  Consumers
+        resample it to whatever physical tiling they run at, so the stored
+        granularity is a *logical* choice, not a kernel block constraint.
+
+        Backend-portability guard: a grid may mix A-side and NoSwap tiles
+        freely and may use B-side tiles only if every B-side tile carries
+        the *same* triple — the one family the mxu single-dispatch row-tile
+        factorization cannot express is heterogeneous B-side decisions
+        (``quant.ax._mxu_limbs_rowtile``), so such grids are rejected here,
+        at the source, instead of silently diverging on one backend.
+        (Controller-produced grids are A-side/NoSwap by construction —
+        ``controller.tile_triples``.)"""
         grid = np.asarray(grid, np.int32)
         assert grid.ndim == 3 and grid.shape[-1] == 3, grid.shape
+        b_side = grid.reshape(-1, 3)
+        b_side = b_side[(b_side[:, 0] == 0) & (b_side[:, 2] <= 1)]
+        assert len(np.unique(b_side, axis=0)) <= 1, (
+            f"tile grid for {key!r} mixes different B-side triples "
+            f"({np.unique(b_side, axis=0).tolist()}): not expressible by the "
+            f"single-dispatch mxu row-tile factorization — use one B-side "
+            f"config uniformly, or A-side/NoSwap per tile")
         self.tile_grids[key] = grid
         self.version += 1
 
     def tile_grid(self, key: str, gm: int, gn: int) -> np.ndarray:
-        """(gm, gn, 3) int32 config grid for the scalar-prefetch kernel.
-        A stored grid is broadcast over rows/cols as needed; otherwise the
-        hierarchical single-config lookup is broadcast to every tile."""
+        """(gm, gn, 3) int32 config grid for the scalar-prefetch kernel and
+        the per-row-tile mxu path.  A stored grid is resampled to the
+        requested tiling (tile i reads stored tile ``i * stored_gm // gm``
+        — exact broadcast when the shapes divide); keys without a stored
+        grid broadcast the hierarchical single-config lookup to every tile,
+        which is what makes scalar and tile-granular policies one
+        continuum."""
         if key in self.tile_grids:
             g = self.tile_grids[key]
-            assert g.shape[0] in (1, gm) and g.shape[1] in (1, gn), (g.shape, gm, gn)
-            return np.broadcast_to(g, (gm, gn, 3)).astype(np.int32)
+            ri = (np.arange(gm) * g.shape[0]) // gm
+            ci = (np.arange(gn) * g.shape[1]) // gn
+            return np.ascontiguousarray(g[ri][:, ci]).astype(np.int32)
         t = np.asarray(triple_of(self.lookup(key)), np.int32)
         return np.broadcast_to(t, (gm, gn, 3)).astype(np.int32).copy()
 
@@ -145,6 +191,9 @@ class SwapPolicy:
         parts = [f"policy[{self.mult_name} v{self.version}]"]
         for k, c in sorted(self.configs.items()):
             parts.append(f"{k}={'noswap' if c is None else c.short()}")
+        for k, g in sorted(self.tile_grids.items()):
+            short = ",".join(triple_short(t) for t in g.reshape(-1, 3))
+            parts.append(f"{k}[tiles {g.shape[0]}x{g.shape[1]}]=({short})")
         return " ".join(parts)
 
 

@@ -47,13 +47,20 @@ class AxRuntimeScope:
     decimation: when False at runtime, every summary in the step is replaced
     by a ``lax.cond`` branch of zeros, so off-steps skip the summary compute
     entirely while the compiled program (and the record pytree structure)
-    stays identical.  None means always-on (the pre-decimation behavior)."""
+    stays identical.  None means always-on (the pre-decimation behavior).
+
+    ``tile_rows`` — per-tile granularity (static at trace time): when > 0,
+    the dyn-tree values are (tile_rows, 1, 3) per-row-tile config *grids*
+    instead of (3,) triples, and ``quant.ax.ax_dense_dyn`` additionally
+    emits a ``telemetry.tile_summary`` record under ``tile_key(target)``
+    for every matching projection (same gate).  0 disables (scalar mode)."""
 
     def __init__(self, dyn_tree: Optional[Dict[str, jax.Array]], collect: bool = False,
-                 gate: Optional[jax.Array] = None):
+                 gate: Optional[jax.Array] = None, tile_rows: int = 0):
         self.dyn = dict(dyn_tree or {})
         self.collect = collect
         self.gate = gate
+        self.tile_rows = int(tile_rows)
         self._records: Dict[str, List[dict]] = {}
 
     def triple_for(self, target: str) -> Optional[jax.Array]:
@@ -87,13 +94,16 @@ def active_scope() -> Optional[AxRuntimeScope]:
 
 @contextlib.contextmanager
 def ax_scope(dyn_tree: Optional[Dict[str, jax.Array]], collect: bool = False,
-             gate: Optional[jax.Array] = None):
+             gate: Optional[jax.Array] = None, tile_rows: int = 0):
     """Open a dynamic-policy scope (used inside the function being jitted).
     ``gate`` is an optional traced observe-every-k boolean: False-at-runtime
-    steps skip the telemetry summary compute (see :class:`AxRuntimeScope`)."""
+    steps skip the telemetry summary compute; ``tile_rows > 0`` switches the
+    scope to per-row-tile mode (grid-valued dyn tree + tile telemetry) —
+    see :class:`AxRuntimeScope`."""
     global _ACTIVE
     prev = _ACTIVE
-    _ACTIVE = AxRuntimeScope(dyn_tree, collect=collect, gate=gate)
+    _ACTIVE = AxRuntimeScope(dyn_tree, collect=collect, gate=gate,
+                             tile_rows=tile_rows)
     try:
         yield _ACTIVE
     finally:

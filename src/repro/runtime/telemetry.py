@@ -30,27 +30,62 @@ from repro.core.swapper import apply_swapper_dyn
 __all__ = [
     "TELEMETRY_SAMPLE",
     "RETUNE_SAMPLE",
+    "TILE_TELEMETRY_SAMPLE",
+    "TILE_RETUNE_SAMPLE",
+    "TILE_KEY_SUFFIX",
     "SUM_FIELDS",
     "MAX_FIELDS",
     "SAMPLE_FIELDS",
+    "tile_key",
+    "is_tile_key",
+    "base_target",
     "operand_summary",
+    "tile_summary",
     "combine_records",
     "TargetTelemetry",
+    "TargetTileTelemetry",
     "Telemetry",
 ]
 
 TELEMETRY_SAMPLE = 2048   # elements of each operand entering the bit/error stats
 RETUNE_SAMPLE = 512       # operand sample exported per call for the re-tune buffer
+TILE_TELEMETRY_SAMPLE = 512  # per-row-tile elements entering the tile bit stats
+TILE_RETUNE_SAMPLE = 256     # per-row-tile operand sample for the tile buffers
+
+# Tile records travel the same scope -> controller -> fleet plumbing as the
+# scalar operand summaries, keyed by ``<target>@tiles`` (no "/" so the
+# hierarchical fallback chain of runtime.scope never strips it).
+TILE_KEY_SUFFIX = "@tiles"
 
 # Cross-shard reduction classes of the summary fields (consumed by
 # ``fleet.collect``): occupancy/error/limb counters are plain sums (psum over
 # the mesh batch axes is exact), the worst-case error is a max, and operand
 # samples concatenate (all-gather).  With TELEMETRY_SAMPLE=2048 the uint32
 # limb sums stay overflow-free up to 32 shards (32 * 2048 * 0xFFFF < 2^32).
+# The tile_* fields are the per-row-tile record (``tile_summary``): counts
+# psum like their scalar counterparts; the per-tile samples are stored
+# *sample-major* — (TILE_RETUNE_SAMPLE, gm), tiles on the LAST axis — so the
+# shared axis-(-2) concatenation rule of combine_records / fleet.collect
+# extends each tile's sample column instead of inventing new tiles.
 SUM_FIELDS = ("bits_a", "bits_b", "neg_a", "neg_b", "n",
-              "err_lo", "err_hi", "err_cnt")
+              "err_lo", "err_hi", "err_cnt",
+              "tile_bits_a", "tile_neg_a", "tile_n")
 MAX_FIELDS = ("err_max",)
-SAMPLE_FIELDS = ("a_smp", "b_smp")
+SAMPLE_FIELDS = ("a_smp", "b_smp", "tile_a_smp", "tile_b_smp")
+
+
+def tile_key(target: str) -> str:
+    """Record key the per-tile summary of ``target`` is collected under."""
+    return target + TILE_KEY_SUFFIX
+
+
+def is_tile_key(key: str) -> bool:
+    return key.endswith(TILE_KEY_SUFFIX)
+
+
+def base_target(key: str) -> str:
+    """Inverse of :func:`tile_key` (identity for non-tile keys)."""
+    return key[:-len(TILE_KEY_SUFFIX)] if is_tile_key(key) else key
 
 
 def _flat_sample(x, n: int):
@@ -118,6 +153,63 @@ def operand_summary(xq, wq, mult: AxMult, dyn, gate=None) -> dict:
         err_cnt=jnp.sum((e != 0).astype(jnp.int32)),
         a_smp=_flat_sample(xq, RETUNE_SAMPLE),
         b_smp=_flat_sample(wq, RETUNE_SAMPLE),
+    )
+
+
+def tile_summary(xq, wq, mult: AxMult, gm: int, gate=None) -> dict:
+    """Per-row-tile telemetry record for one approximate projection call —
+    the host-side twin of the kernels' in-reduction ``tile_hist`` output,
+    shaped for the adaptive loop rather than the physical block layout.
+
+    The flattened row space of ``xq`` (tokens) is split into ``gm`` row
+    tiles by the SAME partition the execution paths apply config tiles with
+    (``core.tiling.rowtile_*`` — observed rows and configured rows must
+    coincide; ``min(gm, rows)`` tiles are emitted when the call is smaller
+    than the granularity, and when the floor span does not divide the row
+    count the last tile's few absorbed remainder rows are left unsampled —
+    shapes stay static and no tile's statistic is ever fabricated from
+    another tile's rows).  Per tile: magnitude-bit occupancy
+    counts + sign count of a ``TILE_TELEMETRY_SAMPLE``-element sample (the
+    per-tile drift statistic) and a ``TILE_RETUNE_SAMPLE``-element operand
+    sample feeding the controller's per-tile re-tune buffers.  ``wq`` is
+    shared by every row tile of a projection, so its sample is emitted once
+    and broadcast — tile re-tunes pair each tile's A sample against it.
+
+    Samples are laid out (sample, tile) — tiles on the last axis — so the
+    fleet's axis-(-2) all-gather/concat rule applies unchanged.  ``gate`` is
+    the same traced decimation boolean as :func:`operand_summary`.
+    """
+    if gate is not None:
+        import jax
+
+        impl = lambda: tile_summary(xq, wq, mult, gm)
+        shapes = jax.eval_shape(impl)
+        zeros = lambda: jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        return jax.lax.cond(gate, impl, zeros)
+    import jax
+
+    from repro.core.tiling import rowtile_count, rowtile_span
+
+    bits = mult.bits
+    x2d = xq.reshape(-1, xq.shape[-1])
+    M = x2d.shape[0]
+    g = rowtile_count(M, gm)
+    rows_per = rowtile_span(M, gm)
+    # g * rows_per <= M (floor span): the last tile's absorbed remainder
+    # rows fall outside the equal reshape and go unsampled
+    tiles = x2d[:g * rows_per].reshape(g, rows_per * x2d.shape[-1])
+    a_t = jax.vmap(lambda v: _flat_sample(v, TILE_TELEMETRY_SAMPLE))(tiles)
+    a_i32 = a_t.astype(jnp.int32)
+    smp = jax.vmap(lambda v: _flat_sample(v, TILE_RETUNE_SAMPLE))(tiles)
+    b_smp = _flat_sample(wq, TILE_RETUNE_SAMPLE)
+    return dict(
+        tile_bits_a=jax.vmap(lambda v: _bit_counts(v, bits))(a_i32),  # (g, bits)
+        tile_neg_a=jnp.sum((a_i32 < 0), axis=1).astype(jnp.float32),  # (g,)
+        tile_n=jnp.full((g,), TILE_TELEMETRY_SAMPLE, jnp.int32),
+        tile_a_smp=smp.T,                                             # (S, g)
+        tile_b_smp=jnp.broadcast_to(b_smp[:, None],
+                                    (TILE_RETUNE_SAMPLE, g)),         # (S, g)
     )
 
 
@@ -205,27 +297,82 @@ class TargetTelemetry:
         )
 
 
+@dataclasses.dataclass
+class TargetTileTelemetry:
+    """Decayed per-row-tile accumulators for one projection target's
+    ``tile_summary`` records (collected under ``tile_key(target)``).
+
+    ``bit_probs`` is a (gm, bits+1) matrix — per row tile, the EW-decayed
+    magnitude-bit P(bit==1) columns plus the trailing sign frequency; the
+    same sufficient statistic the scalar drift detector uses, one row per
+    tile.  The generic :class:`~repro.runtime.drift.DriftDetector` scores it
+    unchanged (mean |delta| over the matrix), so a shift confined to one of
+    ``gm`` tiles reaches the threshold diluted by ~1/gm — size tile drift
+    thresholds accordingly (mirrors the fleet's 1/N shard dilution)."""
+
+    bits: int
+    decay: float
+    n_steps: int = 0
+    bit_probs: Optional[np.ndarray] = None      # (gm, bits+1)
+
+    def update(self, rec: Dict[str, np.ndarray]) -> None:
+        """``rec`` holds stacked per-call arrays (leading axis = calls of
+        this target inside the observed step)."""
+        bits_a = np.sum(np.asarray(rec["tile_bits_a"]), axis=0)    # (gm, bits)
+        neg_a = np.sum(np.asarray(rec["tile_neg_a"]), axis=0)      # (gm,)
+        n = np.maximum(np.sum(np.asarray(rec["tile_n"]), axis=0), 1.0)
+        probs = np.concatenate([bits_a, neg_a[:, None]], axis=-1) / n[:, None]
+        if self.bit_probs is None or self.bit_probs.shape != probs.shape:
+            self.bit_probs = probs
+        else:
+            d = self.decay
+            self.bit_probs = (1.0 - d) * self.bit_probs + d * probs
+        self.n_steps += 1
+
+    def snapshot(self) -> dict:
+        return dict(
+            bit_probs=None if self.bit_probs is None else self.bit_probs.copy(),
+            n_steps=self.n_steps,
+        )
+
+
 class Telemetry:
-    """Per-target streaming telemetry over the records a scope collected."""
+    """Per-target streaming telemetry over the records a scope collected.
+    Records keyed ``<target>@tiles`` route to per-row-tile accumulators
+    (:class:`TargetTileTelemetry`); everything else to the scalar
+    :class:`TargetTelemetry`."""
 
     def __init__(self, bits: int, decay: float = 0.2):
         self.bits = bits
         self.decay = decay
         self.targets: Dict[str, TargetTelemetry] = {}
+        self.tile_targets: Dict[str, TargetTileTelemetry] = {}
 
     def update(self, records: Dict[str, Dict[str, np.ndarray]]) -> None:
         for target, rec in records.items():
+            if is_tile_key(target):
+                tt = self.tile_targets.get(target)
+                if tt is None:
+                    tt = self.tile_targets[target] = TargetTileTelemetry(
+                        self.bits, self.decay)
+                tt.update(rec)
+                continue
             tt = self.targets.get(target)
             if tt is None:
                 tt = self.targets[target] = TargetTelemetry(self.bits, self.decay)
             tt.update(rec)
 
     def snapshot(self) -> Dict[str, dict]:
-        return {t: tt.snapshot() for t, tt in self.targets.items()}
+        out = {t: tt.snapshot() for t, tt in self.targets.items()}
+        out.update({t: tt.snapshot() for t, tt in self.tile_targets.items()})
+        return out
 
     def describe(self) -> str:
         parts = []
         for t, tt in sorted(self.targets.items()):
             parts.append(f"{t}: ew_mae={tt.ew_mae:.2f} mae={tt.stats.mae:.2f} "
                          f"n={tt.stats.n}")
+        for t, tt in sorted(self.tile_targets.items()):
+            gm = 0 if tt.bit_probs is None else tt.bit_probs.shape[0]
+            parts.append(f"{t}: tiles={gm} steps={tt.n_steps}")
         return "telemetry " + " | ".join(parts) if parts else "telemetry <empty>"

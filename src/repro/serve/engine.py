@@ -33,6 +33,14 @@ With ``mesh=...`` the fused adaptive scan additionally runs under
 and the telemetry records are ``psum``/``pmax``/all-gathered **in-graph**
 (``fleet.collect``) before leaving the trace, so one controller sees the
 fleet-global operand distribution.
+
+When the controller (or ``fleet.PolicyReader``) reports ``tile_rows > 0``,
+decode runs **per-row-tile**: the policy enters as (tile_rows, 1, 3) config
+grids instead of scalar triples, every projection additionally emits a
+per-tile telemetry record (same scan-carry slots, same gate), and published
+``SwapPolicy.tile_grids`` land in the compiled step as new traced int32
+values — tile-granular adaptation with zero recompiles, exactly like the
+scalar path (see docs/architecture.md).
 """
 from __future__ import annotations
 
@@ -145,19 +153,29 @@ def _generate_fused(params, cache, tok, key, S, cfg, scfg: ServeConfig, par):
 
 
 # adaptive fused-decode program cache: (cfg, par, n_steps, temperature,
-# k_obs, mesh, cache treedef, batch) -> jitted scan.  Policy values are
-# traced inputs, so every policy update and every wave of a fixed-shape
-# scheduler bucket reuses one entry (tests assert _cache_size() == 1).
+# k_obs, mesh, cache treedef, batch, tile_rows) -> jitted scan.  Policy
+# values are traced inputs, so every policy update and every wave of a
+# fixed-shape scheduler bucket reuses one entry (tests assert
+# _cache_size() == 1).
 _ADAPTIVE_FNS = {}
 
 
 def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
-                        k_obs: int, mesh, cache, batch: int):
+                        k_obs: int, mesh, cache, batch: int,
+                        tile_rows: int = 0):
     """Build (and cache) the fused adaptive decode: one ``lax.scan`` over the
     token loop with telemetry threaded through the scan carry, optionally
-    shard_map'd over the mesh batch axes with in-graph record aggregation."""
+    shard_map'd over the mesh batch axes with in-graph record aggregation.
+
+    ``tile_rows > 0`` is the per-row-tile mode: the dyn-tree leaves are
+    (tile_rows, 1, 3) config grids, the scopes additionally emit per-tile
+    records (they ride the same scan-carry slots — just more record
+    fields), and the compiled program is keyed on the granularity, so
+    scalar and tile policies each compile once and re-tunes never retrace
+    either."""
     treedef = jax.tree_util.tree_structure(cache)
-    key = (cfg, par, n_steps, temperature, k_obs, mesh, treedef, batch)
+    key = (cfg, par, n_steps, temperature, k_obs, mesh, treedef, batch,
+           tile_rows)
     if key in _ADAPTIVE_FNS:
         return _ADAPTIVE_FNS[key]
 
@@ -178,7 +196,7 @@ def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
 
     def decode_scan(params, cache, tok0, key0, start, dyn):
         def probe(params, cache, tok0, start, dyn):
-            with ax_scope(dyn, collect=True) as sc:
+            with ax_scope(dyn, collect=True, tile_rows=tile_rows) as sc:
                 decode_step(params, cache, tok0[:, None], start, cfg, dec_par)
                 return sc.collected()
 
@@ -190,7 +208,8 @@ def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
             tok, cache, key, bufs = carry
             key, sub = jax.random.split(key)
             gate = (i % k_obs) == 0
-            with ax_scope(dyn, collect=True, gate=gate) as sc:
+            with ax_scope(dyn, collect=True, gate=gate,
+                          tile_rows=tile_rows) as sc:
                 logits, cache = decode_step(params, cache, tok[:, None],
                                             start + i, cfg, dec_par)
                 telem = sc.collected()
@@ -225,7 +244,8 @@ def _generate_fused_adaptive(params, cache, tok, key, S, B, cfg,
         return tok[:, None]
     k_obs = max(1, int(scfg.observe_every))
     fn = _adaptive_decode_fn(cfg, par, n_steps, scfg.temperature, k_obs,
-                             mesh, cache, B)
+                             mesh, cache, B,
+                             tile_rows=getattr(adaptive, "tile_rows", 0))
     toks, bufs = fn(params, cache, tok, key, jnp.int32(S), adaptive.dyn_tree())
     out = jnp.concatenate([tok[:, None], jnp.swapaxes(toks, 0, 1)], axis=1)
     bufs = jax.device_get(bufs)
@@ -252,9 +272,11 @@ def _generate_stepwise(params, cache, tok, key, S, cfg, scfg: ServeConfig, par,
         # Routing per-layer telemetry through scan carries is a ROADMAP
         # follow-on.
         dec_par = dataclasses.replace(par or ParallelConfig(), scan_layers=False)
+        tile_rows = getattr(adaptive, "tile_rows", 0)
 
         def _adaptive_step(p, c, t, i, dyn, gate):
-            with ax_scope(dyn, collect=True, gate=gate) as sc:
+            with ax_scope(dyn, collect=True, gate=gate,
+                          tile_rows=tile_rows) as sc:
                 logits, new_cache = decode_step(p, c, t, i, cfg, dec_par)
                 return logits, new_cache, sc.collected()
 

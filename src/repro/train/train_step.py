@@ -21,7 +21,7 @@ def init_train_state(params, opt_cfg: AdamWConfig):
 
 
 def make_train_step(cfg: ModelConfig, par: ParallelConfig, opt_cfg: AdamWConfig,
-                    adaptive: bool = False):
+                    adaptive: bool = False, tile_rows: int = 0):
     """Returns step(state, batch) -> (state, metrics).  With
     par.grad_accum = k, the global batch is split into k microbatches and
     gradients are accumulated in f32 (collectives overlap with compute under
@@ -31,7 +31,9 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, opt_cfg: AdamWConfig,
     where ``ax_dyn`` is the controller's traced swap-triple tree; the SWAPPER
     forward runs under the dynamic policy and the step's telemetry records
     come back in ``metrics['ax_telemetry']`` (policy updates between steps
-    never retrace — only the int32 triples change)."""
+    never retrace — only the int32 triples change).  ``tile_rows > 0``
+    matches a tile-granular controller: ``ax_dyn`` leaves are per-row-tile
+    grids and the telemetry additionally carries the per-tile records."""
 
     def loss_fn(params, batch):
         loss, metrics = train_loss(params, batch, cfg, par)
@@ -83,7 +85,7 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, opt_cfg: AdamWConfig,
         def loss_fn_dyn(params, batch):
             # telemetry must leave through the loss aux: the records are
             # created inside this (differentiated) trace
-            with ax_scope(ax_dyn, collect=True) as sc:
+            with ax_scope(ax_dyn, collect=True, tile_rows=tile_rows) as sc:
                 loss, metrics = train_loss(params, batch, cfg, par)
             return loss, dict(metrics, ax_telemetry=sc.collected())
 

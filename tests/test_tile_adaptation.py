@@ -1,0 +1,431 @@
+"""The closed per-tile adaptation loop (PR 4): tile-histogram kernel
+outputs, per-row-tile dynamic execution on every backend, tile telemetry ->
+controller -> ``SwapPolicy.tile_grids`` -> store/reader adoption, the
+engine's tile-mode fused decode, and the 8-device psum aggregation of tile
+records (subprocess, forced device count)."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.kernels as K
+import repro.runtime as R
+from repro.configs.base import AxPolicy
+from repro.fleet import PolicyReader, PolicyStore
+from repro.quant.ax import ax_matmul_int_dyn
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# kernel tile histograms: bit-exact vs the host oracle across slab depths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k_slab", [1, 4, None])
+@pytest.mark.parametrize("mname", ["mul8s_trunc0_4", "mul8u_trunc0_4"])
+def test_kernel_tile_hist_bitexact(mname, k_slab):
+    rng = np.random.default_rng(11)
+    lo, hi, dt = (-128, 128, np.int8) if mname.startswith("mul8s") else (0, 256, np.uint8)
+    a = jnp.asarray(rng.integers(lo, hi, (64, 48)).astype(dt))
+    b = jnp.asarray(rng.integers(lo, hi, (48, 64)).astype(dt))
+    m = C.get(mname)
+    out, hist = K.ax_matmul(a, b, m, C.SwapConfig("A", 5, 1), block_m=32,
+                            block_n=32, block_k=16, k_slab=k_slab,
+                            tile_hist=True)
+    assert hist.dtype == jnp.int32 and hist.shape == (2, 2, 2, m.bits + 1)
+    assert np.array_equal(np.asarray(hist), K.tile_hist_ref(a, b, m.bits, 2, 2))
+    # the histogram output must not perturb the matmul result
+    ref = K.ax_matmul_ref(a, b, m, C.SwapConfig("A", 5, 1))
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("k_slab", [1, None])
+def test_grid_kernel_tile_hist_bitexact(k_slab):
+    """The scalar-prefetch grid kernel emits the same histograms — one
+    dispatch both applies the per-tile policy and observes the per-tile
+    distribution."""
+    rng = np.random.default_rng(12)
+    a = jnp.asarray(rng.integers(-128, 128, (64, 32)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (32, 64)).astype(np.int8))
+    m = C.get("mul8s_trunc0_4")
+    grid = np.stack([rng.integers(0, 2, (2, 2)), rng.integers(0, 8, (2, 2)),
+                     rng.integers(0, 3, (2, 2))], axis=-1).astype(np.int32)
+    out, hist = K.ax_matmul_grid(a, b, m, jnp.asarray(grid), block_m=32,
+                                 block_n=32, block_k=16, k_slab=k_slab,
+                                 tile_hist=True)
+    assert np.array_equal(np.asarray(hist), K.tile_hist_ref(a, b, m.bits, 2, 2))
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(K.ax_matmul_grid_ref(a, b, m, jnp.asarray(grid))))
+    # histograms are policy-independent: a different grid, same counts
+    grid2 = np.broadcast_to(np.asarray((1, 0, 2), np.int32), (2, 2, 3))
+    _, hist2 = K.ax_matmul_grid(a, b, m, jnp.asarray(grid2), block_m=32,
+                                block_n=32, block_k=16, k_slab=k_slab,
+                                tile_hist=True)
+    assert np.array_equal(np.asarray(hist), np.asarray(hist2))
+
+
+# ---------------------------------------------------------------------------
+# per-row-tile dynamic execution: all backends agree on the grid semantics
+# ---------------------------------------------------------------------------
+
+def _pol(backend):
+    return AxPolicy(backend=backend)
+
+
+@pytest.mark.parametrize("shape", [(3, 16, 64), (1, 10, 64), (2, 64)])
+def test_rowtile_dyn_backends_agree(shape):
+    """A-side/NoSwap per-row-tile grids: mxu (single K-stacked matmul),
+    kernel (scalar-prefetch grid) and emul produce identical int32 results,
+    including uneven last tiles and gm > rows."""
+    rng = np.random.default_rng(13)
+    a = jnp.asarray(rng.integers(-127, 128, shape).astype(np.int8))
+    b = jnp.asarray(rng.integers(-127, 128, (64, 96)).astype(np.int8))
+    grid = jnp.asarray([[[1, 3, 0]], [[1, 0, 2]], [[1, 6, 1]]], jnp.int32)
+    ref = ax_matmul_int_dyn(a, b, _pol("emul"), grid)
+    for be in ("mxu", "kernel"):
+        got = ax_matmul_int_dyn(a, b, _pol(be), grid)
+        assert np.array_equal(np.asarray(got), np.asarray(ref)), be
+
+
+def test_rowtile_bside_kernel_matches_emul():
+    """B-side per-tile decisions are the grid kernel's (and emul's) domain;
+    they agree bit-exactly (the mxu row-tile path is A-side-only by
+    construction — see quant.ax._mxu_limbs_rowtile)."""
+    rng = np.random.default_rng(14)
+    a = jnp.asarray(rng.integers(-127, 128, (32, 64)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-127, 128, (64, 96)).astype(np.int8))
+    grid = jnp.asarray([[[0, 2, 0]], [[1, 0, 2]], [[0, 7, 1]], [[0, 1, 0]]],
+                       jnp.int32)
+    assert np.array_equal(
+        np.asarray(ax_matmul_int_dyn(a, b, _pol("kernel"), grid)),
+        np.asarray(ax_matmul_int_dyn(a, b, _pol("emul"), grid)))
+
+
+def test_uniform_grid_matches_scalar_triple():
+    """A uniform per-tile grid reproduces the scalar dynamic path exactly
+    on every backend — INCLUDING a B-side config (the broadcast a scalar
+    B-tuned target gets under --tile-rows): scalar and tile-granular
+    policies are one continuum, and enabling tile mode never changes the
+    numerics of a scalar policy."""
+    rng = np.random.default_rng(15)
+    a = jnp.asarray(rng.integers(-127, 128, (24, 64)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-127, 128, (64, 32)).astype(np.int8))
+    for trip in ((1, 5, 1), (1, 0, 2), (0, 3, 1), (0, 6, 0)):
+        t = jnp.asarray(trip, jnp.int32)
+        grid = jnp.broadcast_to(t, (4, 1, 3))
+        for be in ("mxu", "kernel", "emul"):
+            assert np.array_equal(
+                np.asarray(ax_matmul_int_dyn(a, b, _pol(be), grid)),
+                np.asarray(ax_matmul_int_dyn(a, b, _pol(be), t))), (be, trip)
+
+
+@pytest.mark.parametrize("grid", [
+    # B-side tile first
+    [[[0, 3, 1]], [[1, 5, 0]], [[1, 0, 2]], [[0, 3, 1]]],
+    # B-side tile NOT first (the representative must be found, not assumed
+    # at position 0), mixed with A-side and NoSwap tiles
+    [[[1, 5, 0]], [[0, 2, 0]], [[1, 0, 2]], [[0, 2, 0]]],
+    # NoSwap-only ahead of a trailing B-side tile
+    [[[1, 0, 2]], [[1, 0, 2]], [[1, 0, 2]], [[0, 7, 1]]],
+])
+def test_mixed_aside_with_uniform_bside_grid_agrees(grid):
+    """Grids mixing A-side/NoSwap tiles with ONE shared B-side triple are
+    exact on the mxu 4-limb row-tile path wherever the B-side tile sits
+    (the expressible B-side family; heterogeneous B-side grids are
+    rejected by SwapPolicy.set_tile_grid)."""
+    rng = np.random.default_rng(20)
+    a = jnp.asarray(rng.integers(-127, 128, (32, 64)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-127, 128, (64, 48)).astype(np.int8))
+    grid = jnp.asarray(grid, jnp.int32)
+    ref = ax_matmul_int_dyn(a, b, _pol("emul"), grid)
+    for be in ("mxu", "kernel"):
+        assert np.array_equal(
+            np.asarray(ax_matmul_int_dyn(a, b, _pol(be), grid)),
+            np.asarray(ref)), be
+
+
+def test_tile_drift_survives_granularity_change():
+    """gm follows min(tile_rows, rows): a batch-size change mid-stream
+    changes the tile statistic's shape — the drift detector must rebase,
+    not crash (and not silently broadcast-compare)."""
+    ctrl = R.AdaptiveController(
+        R.SwapPolicy("mul8u_trunc0_4", configs={"*": None}),
+        targets=("stream",),
+        cfg=R.AdaptiveConfig(min_observe_steps=1, cooldown_steps=1,
+                             tile_rows=4))
+    rng = np.random.default_rng(21)
+    for rows in (3, 3, 4, 4, 2, 4):      # granularity flips 3 -> 4 -> 2 -> 4
+        ctrl.observe_operands("stream", rng.integers(0, 256, (rows, 64)),
+                              rng.integers(0, 256, 256))
+    snap = ctrl.telemetry.snapshot()[R.tile_key("stream")]
+    assert snap["bit_probs"].shape == (4, 9)
+
+
+def test_set_tile_grid_rejects_heterogeneous_bside():
+    p = R.SwapPolicy("mul8u_trunc0_4")
+    # uniform B-side: fine; A-side mix: fine
+    p.set_tile_grid("ok", np.asarray([[[0, 3, 1]], [[0, 3, 1]], [[1, 2, 0]]],
+                                     np.int32))
+    with pytest.raises(AssertionError, match="B-side"):
+        p.set_tile_grid("bad", np.asarray([[[0, 3, 1]], [[0, 5, 0]]], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# tile telemetry records
+# ---------------------------------------------------------------------------
+
+def test_tile_summary_shapes_and_gate():
+    mult = C.get("mul8u_trunc0_4")
+    rng = np.random.default_rng(16)
+    x = jnp.asarray(rng.integers(0, 256, (16, 128)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 256, (128, 32)), jnp.int32)
+    rec = jax.device_get(R.tile_summary(x, w, mult, 4))
+    assert rec["tile_bits_a"].shape == (4, mult.bits)
+    assert rec["tile_a_smp"].shape == (R.TILE_RETUNE_SAMPLE, 4)
+    assert rec["tile_n"].sum() == 4 * R.TILE_TELEMETRY_SAMPLE
+    # every field is classified for the fleet reduction
+    from repro.runtime.telemetry import MAX_FIELDS, SAMPLE_FIELDS, SUM_FIELDS
+    for k in rec:
+        assert k in SUM_FIELDS + MAX_FIELDS + SAMPLE_FIELDS, k
+    # gate=False produces the all-zero record of identical structure
+    off = jax.device_get(R.tile_summary(x, w, mult, 4, gate=jnp.bool_(False)))
+    assert set(off) == set(rec)
+    assert all(np.all(np.asarray(v) == 0) for v in off.values())
+    on = jax.device_get(R.tile_summary(x, w, mult, 4, gate=jnp.bool_(True)))
+    for k in rec:
+        assert np.array_equal(np.asarray(on[k]), np.asarray(rec[k])), k
+
+
+def test_tile_summary_rows_smaller_than_granularity():
+    mult = C.get("mul8u_trunc0_4")
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.integers(0, 256, (2, 64)), jnp.int32)
+    rec = jax.device_get(R.tile_summary(x, x.T, mult, 8))
+    assert rec["tile_bits_a"].shape == (2, mult.bits)   # min(gm, rows) tiles
+
+
+# ---------------------------------------------------------------------------
+# the closed loop: skewed two-tile traffic -> non-uniform published grid ->
+# store round-trip -> reader adoption (ISSUE acceptance)
+# ---------------------------------------------------------------------------
+
+def test_controller_closes_tile_loop(tmp_path):
+    mult = C.get("mul8u_trunc0_4")
+    store = PolicyStore(str(tmp_path))
+    ctrl = R.AdaptiveController(
+        R.SwapPolicy(mult.name, configs={"*": None}), targets=("stream",),
+        store=store,
+        cfg=R.AdaptiveConfig(decay=0.4, drift_threshold=0.005,
+                             min_observe_steps=2, cooldown_steps=2,
+                             tile_rows=2, tile_buffer_size=512))
+    ctrl.resume_from_store()
+    ctrl.warmup()
+    cache0 = ctrl.scorer_cache_size()
+    reader = PolicyReader(store, ("stream",), tile_rows=2)
+    v0 = reader.version
+    t0 = reader.dyn_tree()
+    assert t0["stream"].shape == (2, 1, 3)
+
+    rng = np.random.default_rng(18)
+    K_ = 128
+    for step in range(16):
+        hi = rng.integers(128, 256, (8, K_))
+        lo = (rng.integers(0, 48, (8, K_)) if step >= 6
+              else rng.integers(128, 256, (8, K_)))
+        ctrl.observe_operands("stream", np.concatenate([hi, lo]),
+                              rng.integers(0, 256, 1024))
+
+    # the loop closed: a tile re-tune fired and published a NON-uniform grid
+    assert len(ctrl.tile_retunes) >= 1
+    grid = ctrl.policy.tile_grids["stream"]
+    assert grid.shape == (2, 1, 3)
+    assert not np.array_equal(grid[0], grid[1]), grid
+    # tile sweep space is backend-portable: A-side or NoSwap only
+    assert all(int(t[0]) == 1 for t in grid[:, 0, :]), grid
+    # zero recompiles across every tile re-tune (scorers warmed up once)
+    assert ctrl.scorer_cache_size() == cache0
+
+    # JSON round-trip preserves the grid bit-exactly
+    back = R.SwapPolicy.from_json(ctrl.policy.to_json())
+    assert back.configs_equal(ctrl.policy)
+    assert np.array_equal(back.tile_grids["stream"], grid)
+
+    # reader: staleness grows, poll adopts, dyn tree keeps shape (no retrace)
+    assert reader.staleness() >= 1
+    assert reader.poll() and reader.version > v0
+    assert reader.staleness() == 0
+    t1 = reader.dyn_tree()
+    assert jax.tree.structure(t0) == jax.tree.structure(t1)
+    assert t1["stream"].shape == (2, 1, 3)
+    assert np.array_equal(np.asarray(t1["stream"]), grid)
+
+
+def test_reader_staleness_from_empty_store(tmp_path):
+    """A replica that spun up against an empty store is behind EVERY
+    version published afterwards — maximal lag, never zero."""
+    store = PolicyStore(str(tmp_path))
+    reader = PolicyReader(store, ("mlp",))
+    assert reader.version == -1 and reader.staleness() == 0   # nothing exists
+    p = R.SwapPolicy("mul8u_trunc0_4")
+    store.publish(p)
+    store.publish(p)
+    assert reader.staleness() == 2
+    assert reader.poll() and reader.staleness() == 0
+
+
+def test_policy_tile_grid_resample():
+    p = R.SwapPolicy("mul8u_trunc0_4", configs={"*": C.SwapConfig("A", 3, 0)})
+    # no stored grid: scalar config broadcasts to every tile
+    g = p.tile_grid("mlp", 4, 1)
+    assert g.shape == (4, 1, 3) and np.all(g == np.asarray((1, 3, 0)))
+    # stored (2, 1): resamples up (repeat) and down (stride) deterministically
+    p.set_tile_grid("mlp", np.asarray([[[1, 7, 1]], [[1, 0, 2]]], np.int32))
+    up = p.tile_grid("mlp", 4, 1)
+    assert np.array_equal(up[:, 0, 0:3:2], [[1, 1], [1, 1], [1, 2], [1, 2]])
+    down = p.tile_grid("mlp", 1, 1)
+    assert np.array_equal(down[0, 0], [1, 7, 1])
+    # dyn_tree in tile mode serves the resampled grid
+    tree = p.dyn_tree(("mlp",), tile_rows=4)
+    assert tree["mlp"].shape == (4, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# engine: tile-mode fused decode == stepwise loop; grid adoption, no retrace
+# ---------------------------------------------------------------------------
+
+def _tiny_model():
+    import repro.configs as CFG
+    from repro.models import init_params
+
+    cfg = CFG.reduced(CFG.ARCHS["qwen2-72b"])
+    cfg = dataclasses.replace(cfg, n_layers=2, ax=AxPolicy(backend="mxu"))
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _tile_controller(cfg):
+    return R.AdaptiveController(
+        R.SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
+        cfg=R.AdaptiveConfig(min_observe_steps=10 ** 6, tile_rows=2))
+
+
+def test_engine_tile_mode_fused_matches_stepwise():
+    from repro.serve import ServeConfig, generate
+    from repro.serve import engine as E
+
+    cfg, params = _tiny_model()
+    rng = np.random.default_rng(19)
+    prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 12)),
+                                    jnp.int32)}
+    cA, cB = _tile_controller(cfg), _tile_controller(cfg)
+    kw = dict(max_new_tokens=8)
+    o_loop = generate(params, prompt, cfg, ServeConfig(fused=False, **kw),
+                      adaptive=cA)
+    o_scan = generate(params, prompt, cfg, ServeConfig(fused=True, **kw),
+                      adaptive=cB)
+    assert np.array_equal(np.asarray(o_loop), np.asarray(o_scan))
+    sA, sB = cA.telemetry.snapshot(), cB.telemetry.snapshot()
+    tile_keys = {R.tile_key(t) for t in cfg.ax.targets}
+    assert tile_keys <= set(sA) and tile_keys <= set(sB)
+    for k in tile_keys:
+        assert np.allclose(sA[k]["bit_probs"], sB[k]["bit_probs"]), k
+    assert set(cB.tile_buffers) == set(cfg.ax.targets)
+
+    # adopting a non-uniform tile grid changes tokens with ZERO retraces
+    n0 = {k: f._cache_size() for k, f in E._ADAPTIVE_FNS.items()}
+    cB.policy.set_tile_grid("mlp", np.asarray([[[1, 7, 1]], [[1, 0, 2]]],
+                                              np.int32))
+    o2 = generate(params, prompt, cfg, ServeConfig(fused=True, **kw),
+                  adaptive=cB)
+    assert all(f._cache_size() == n0[k] for k, f in E._ADAPTIVE_FNS.items())
+    assert not np.array_equal(np.asarray(o_scan), np.asarray(o2))
+
+
+# ---------------------------------------------------------------------------
+# 8-device mesh: tile records psum/all-gather bit-exactly (subprocess)
+# ---------------------------------------------------------------------------
+
+def _run_sub(code, timeout=540):
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT:"):
+            return json.loads(line[len("RESULT:"):])
+    raise AssertionError(out.stdout[-2000:])
+
+
+_TILE_PSUM_SCRIPT = r"""
+import json
+import jax, jax.numpy as jnp, numpy as np
+import repro.core as C
+import repro.runtime as R
+from repro.fleet import make_sharded_summarizer
+from repro.launch.mesh import make_fleet_mesh
+from repro.runtime.telemetry import combine_records, tile_key
+
+res = {"devices": jax.device_count()}
+mesh = make_fleet_mesh(8)
+mult = C.get("mul8u_trunc0_4")
+dyn = jnp.asarray(R.NO_SWAP_TRIPLE, jnp.int32)
+GM = 2
+f = make_sharded_summarizer(mult.name, mesh, tile_rows=GM)
+rng = np.random.default_rng(0)
+ROWS, K = 16, 128          # per-shard row slice: 16 rows -> 2 row tiles of 8
+
+a = rng.integers(0, 256, (8 * ROWS, K))
+b = rng.integers(0, 256, 8 * R.TELEMETRY_SAMPLE)
+got = jax.device_get(f(jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32), dyn))
+
+shard_recs = []
+for s in range(8):
+    al = jnp.asarray(a[s*ROWS:(s+1)*ROWS], jnp.int32)
+    bl = jnp.asarray(b[s*R.TELEMETRY_SAMPLE:(s+1)*R.TELEMETRY_SAMPLE], jnp.int32)
+    rec = jax.device_get(R.operand_summary(al, bl, mult, dyn))
+    trec = jax.device_get(R.tile_summary(al, bl, mult, GM))
+    shard_recs.append({
+        "stream": {k: np.asarray(v)[None] for k, v in rec.items()},
+        tile_key("stream"): {k: np.asarray(v)[None] for k, v in trec.items()},
+    })
+ref = combine_records(shard_recs)
+res["scalar_bitexact"] = all(
+    np.array_equal(got["stream"][k], ref["stream"][k].reshape(got["stream"][k].shape))
+    for k in got["stream"])
+tk = tile_key("stream")
+res["tile_bitexact"] = all(
+    np.array_equal(got[tk][k], ref[tk][k].reshape(got[tk][k].shape))
+    for k in got[tk])
+res["tile_fields"] = sorted(got[tk])
+res["tile_smp_shape"] = list(np.asarray(got[tk]["tile_a_smp"]).shape)
+
+# the fleet-aggregated tile records drive a per-tile re-tune on the
+# controller exactly like single-host records
+ctrl = R.AdaptiveController(
+    R.SwapPolicy(mult.name, configs={"*": None}), targets=("stream",),
+    cfg=R.AdaptiveConfig(min_observe_steps=10**9, tile_rows=GM))
+ctrl.observe(got)
+ctrl.retune_tiles("stream")
+res["grid_published"] = "stream" in ctrl.policy.tile_grids
+print("RESULT:" + json.dumps(res))
+"""
+
+
+def test_tile_records_psum_bitexact_8dev():
+    """ISSUE acceptance: tile histograms psum-aggregate correctly on a
+    forced 8-device mesh (bit-exact vs the host combine oracle), and the
+    aggregated records feed the controller's per-tile re-tune."""
+    r = _run_sub(_TILE_PSUM_SCRIPT)
+    assert r["devices"] == 8
+    assert r["scalar_bitexact"], r
+    assert r["tile_bitexact"], r
+    # all-gather concatenated 8 shards' samples along the sample axis
+    assert r["tile_smp_shape"] == [1, 8 * R.TILE_RETUNE_SAMPLE, 2], r
+    assert r["grid_published"], r
