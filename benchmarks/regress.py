@@ -8,7 +8,7 @@ artifact against the committed baseline and fails on any counter that got
 worse; wall-time movement is reported informationally only.
 
     PYTHONPATH=src python -m benchmarks.run --quick --check \
-        [--baseline benchmarks/baselines/BENCH_2.json]
+        [--baseline benchmarks/baselines/BENCH_4.json]
 """
 from __future__ import annotations
 
@@ -18,8 +18,11 @@ from typing import List, Tuple
 __all__ = ["RULES", "WALL_NOTES", "check", "check_files"]
 
 # (dotted path, rule): 'le' — new value must not exceed baseline;
-# 'true' — must be truthy in the new artifact.  Paths missing from either
-# side are skipped (older baselines predate newer sections).
+# 'true' — must be truthy in the new artifact; 'ge:<other path>' — must be
+# >= another value of the SAME (new) artifact (cross-section invariants,
+# e.g. token-granular occupancy must meet the wave baseline it replaces).
+# Paths missing from either side are skipped (older baselines predate newer
+# sections).
 RULES = [
     ("matmul_dispatch.static_stacked.dot_generals", "le"),
     ("matmul_dispatch.dyn_stacked.dot_generals", "le"),
@@ -33,6 +36,13 @@ RULES = [
     # beating the layer-granular policy on at least one app stream, with a
     # recompile-free tile re-tune (deterministic: fixed seeds, counter data)
     ("tile_adaptation.tile_beats_layer", "true"),
+    # token-granular serving (PR 5): mid-flight admission must produce the
+    # wave oracle's per-request tokens bit-exactly, never lose occupancy to
+    # the wave design it replaces, and never add compiled programs across
+    # splices / policy updates
+    ("serving.bit_identical_requests", "true"),
+    ("serving.zero_recompiles", "true"),
+    ("serving.token_granular_occupancy", "ge:serving.wave_occupancy"),
 ]
 
 # informational wall-time trajectory (never gating)
@@ -41,6 +51,8 @@ WALL_NOTES = [
     "matmul_dispatch.dyn_stacked.us_per_call",
     "kernel_reduction.static_slab8_us",
     "decode.scan_steps_per_s",
+    "serving.wave_tokens_per_s",
+    "serving.token_granular_tokens_per_s",
 ]
 
 
@@ -62,6 +74,16 @@ def check(new: dict, baseline: dict) -> Tuple[List[str], List[str]]:
                 continue
             if not nv:
                 failures.append(f"{path}: expected truthy, got {nv!r}")
+            continue
+        if rule.startswith("ge:"):
+            # same-artifact invariant: both sides read from the NEW artifact
+            ov = _get(new, rule[3:])
+            if nv is None or ov is None:
+                continue
+            if nv < ov:
+                failures.append(f"{path}: {nv} < {rule[3:]} ({ov}) (regression)")
+            else:
+                notes.append(f"{path}: {nv} >= {rule[3:]} ({ov}) ok")
             continue
         bv = _get(baseline, path)
         if nv is None or bv is None:

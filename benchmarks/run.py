@@ -4,12 +4,13 @@
 
 Prints each table and a ``name,us_per_call,derived`` CSV summary line per
 benchmark (derived = the table's headline number).  Also runs the hot-path
-perf microbenchmarks plus the fleet-serving microbenchmarks and writes
-``BENCH_4.json`` (dispatch / reduction / decode / fleet / tile-adaptation
-numbers — this PR's point on the perf trajectory).  ``--check`` then diffs
-the artifact's deterministic counters against the committed baseline
-(``benchmarks/baselines/BENCH_3.json``) and exits non-zero on regression —
-wall times are reported informationally only (see ``benchmarks.regress``).
+perf microbenchmarks plus the fleet- and token-granular-serving
+microbenchmarks and writes ``BENCH_5.json`` (dispatch / reduction / decode /
+fleet / tile-adaptation / serving numbers — this PR's point on the perf
+trajectory).  ``--check`` then diffs the artifact's deterministic counters
+against the committed baseline (``benchmarks/baselines/BENCH_4.json``) and
+exits non-zero on regression — wall times are reported informationally only
+(see ``benchmarks.regress``).
 """
 from __future__ import annotations
 
@@ -18,18 +19,18 @@ import sys
 import time
 
 from . import (adaptive_table, app_table, component_table, fleet_table,
-               hw_table, perf_table, regress, roofline_table)
+               hw_table, perf_table, regress, roofline_table, serving_table)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small fast subset")
     ap.add_argument("--full", action="store_true", help="all multipliers + ALL parts")
-    ap.add_argument("--bench-out", default="BENCH_4.json",
-                    help="perf/fleet/tile JSON artifact path")
+    ap.add_argument("--bench-out", default="BENCH_5.json",
+                    help="perf/fleet/tile/serving JSON artifact path")
     ap.add_argument("--check", action="store_true",
                     help="fail on deterministic-counter regression vs --baseline")
-    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_3.json",
+    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_4.json",
                     help="committed baseline artifact for --check")
     args = ap.parse_args()
 
@@ -86,10 +87,20 @@ def main() -> None:
                f" fused_speedup={fa['speedup']:.2f}x"
                f" slot_util={100*fleet['scheduler']['slot_utilization']:.0f}%")
 
+    t0 = time.time()
+    srv = serving_table.run(quick=args.quick)
+    print("\n" + serving_table.format_table(srv))
+    csv.append(f"serving_table,{1e6*(time.time()-t0):.0f},"
+               f"occupancy={srv['wave_occupancy']:.2f}->"
+               f"{srv['token_granular_occupancy']:.2f}"
+               f" splices={srv['token_splices']}"
+               f" bit_identical={srv['bit_identical_requests']}")
+
     perf["fleet"] = fleet
     perf["tile_adaptation"] = ad["tile"]
+    perf["serving"] = srv
     perf_table.write_json(perf, args.bench_out)
-    print(f"(perf+fleet+tile tables written to {args.bench_out})")
+    print(f"(perf+fleet+tile+serving tables written to {args.bench_out})")
 
     t0 = time.time()
     hw = hw_table.run()

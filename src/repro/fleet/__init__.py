@@ -11,9 +11,11 @@ Makes the online adaptive SWAPPER runtime mesh-native:
               serve replicas and elastic restarts resume the *adapted*
               policy, never the offline-tuned one
   scheduler — continuous-batching ``ContinuousBatcher``: variable-length
-              requests admitted into fixed-shape decode slots, each wave one
-              fused adaptive ``lax.scan`` dispatch (telemetry threaded
-              through the scan carry; zero recompiles across waves, policy
+              requests admitted into fixed-shape decode slots with pad-mask
+              prefill — wave mode runs one fused adaptive ``lax.scan``
+              dispatch per wave, token-granular mode splices the next FIFO
+              request into a finished slot mid-flight via per-slot cache
+              positions (zero recompiles across waves, splices, policy
               updates, and reader syncs)
 """
 from .collect import (

@@ -42,6 +42,7 @@ __all__ = [
     "batch_axis_names",
     "aggregate_records",
     "shard_decode_specs",
+    "token_step_specs",
     "make_sharded_summarizer",
 ]
 
@@ -113,15 +114,7 @@ def cache_pspecs(cache, batch: int, axes: Tuple[str, ...]):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def shard_decode_specs(cache, batch: int, mesh: Mesh):
-    """(in_specs, out_specs, axes) for the shard_map'd fused adaptive decode
-    ``(params, cache, tok0, key0, start, dyn) -> (toks, telem)``:
-
-    * params / RNG key / start index / policy triples are replicated,
-    * the token vector and every cache leaf shard their batch dim,
-    * output tokens stay batch-sharded; the telemetry tree is replicated
-      (it was psum/pmax/all-gathered inside the step).
-    """
+def _batch_axes_checked(batch: int, mesh: Mesh) -> Tuple[str, ...]:
     axes = batch_axis_names(mesh)
     nshard = 1
     for a in axes:
@@ -133,8 +126,38 @@ def shard_decode_specs(cache, batch: int, mesh: Mesh):
         f"{nshard} batch shards would overflow the uint32 error-limb psum "
         f"(see runtime.telemetry field classes: bound is 32 shards at "
         f"TELEMETRY_SAMPLE=2048)")
-    in_specs = (P(), cache_pspecs(cache, batch, axes), P(axes), P(), P(), P())
+    return axes
+
+
+def shard_decode_specs(cache, batch: int, mesh: Mesh):
+    """(in_specs, out_specs, axes) for the shard_map'd fused adaptive decode
+    ``(params, cache, tok0, key0, pos0, budget, bmax, dyn) -> (toks,
+    telem)``:
+
+    * params / RNG key / the global-budget-max scalar (the shard-invariant
+      telemetry gate) / policy triples are replicated,
+    * the token vector, the per-slot position/budget vectors and every
+      cache leaf shard their batch dim,
+    * output tokens stay batch-sharded; the telemetry tree is replicated
+      (it was psum/pmax/all-gathered inside the step).
+    """
+    axes = _batch_axes_checked(batch, mesh)
+    in_specs = (P(), cache_pspecs(cache, batch, axes), P(axes), P(),
+                P(axes), P(axes), P(), P())
     out_specs = (P(None, axes), P())
+    return in_specs, out_specs, axes
+
+
+def token_step_specs(cache, batch: int, mesh: Mesh):
+    """(in_specs, out_specs, axes) for the shard_map'd token-granular step
+    ``(params, cache, tok, sub, pos, active, dyn, gate) -> (tok, cache,
+    telem)``: per-slot vectors and cache leaves shard their batch dim,
+    everything else is replicated (the telemetry tree was aggregated
+    in-graph)."""
+    axes = _batch_axes_checked(batch, mesh)
+    cspecs = cache_pspecs(cache, batch, axes)
+    in_specs = (P(), cspecs, P(axes), P(), P(axes), P(axes), P(), P())
+    out_specs = (P(axes), cspecs, P())
     return in_specs, out_specs, axes
 
 

@@ -1,28 +1,40 @@
 """Continuous-batching scheduler: variable-length requests -> fixed-shape
-decode slots -> one fused dispatch per wave.
+decode slots -> fused wave dispatches or token-granular slot splicing.
 
 Serving traffic arrives as requests of arbitrary prompt length and token
 budget; the compiled fast path (the PR-2 fused ``lax.scan`` decode, now
 adaptive and mesh-shardable) wants **fixed shapes**.  The
 :class:`ContinuousBatcher` bridges the two:
 
-* requests queue per **prompt bucket** (prompts right-pad to the bucket
-  length by repeating their final token — the repo's models carry no
-  attention pad-mask, so padding conditions the generation on the padded
-  prompt; bucket granularity bounds that overhead and the stats report it);
-* each **wave** admits up to ``n_slots`` same-bucket requests FIFO, fills
-  idle slots by cycling the admitted prompts (their outputs are discarded),
-  and runs ONE fused adaptive dispatch of ``new_token_bucket`` steps for the
-  whole slot batch — under a mesh, slots shard over the batch axes and
-  telemetry aggregates in-graph;
-* every (bucket, token-budget) shape class compiles once; later waves —
-  including waves after a policy re-tune or a ``PolicyReader`` sync — reuse
-  the compiled program (the policy is traced int32 values).
-
-Slots rebind between waves (wave-granular continuous batching).
-Token-granular slot splicing — admitting a fresh request into a mid-flight
-batch — needs per-slot cache indices in ``decode_step`` and is a ROADMAP
-follow-on.
+* requests queue per **prompt bucket**; prompts right-pad to the bucket
+  length and prefill runs **pad-masked** (``prompt_lens``): the models'
+  attention carries a pad-mask input, so a padded prompt attends only to
+  its real tokens and generates bit-identically to the same prompt served
+  unpadded (bucket granularity now costs only wasted compute, never wrong
+  conditioning).  Pad-masking needs a full-attention stack — ring caches
+  and recurrent/ssm state would absorb the pad tail — so other families
+  keep the PR-3 repeat-pad wave behavior;
+* **wave mode** (the default, and the bit-exactness oracle): each wave
+  admits up to ``n_slots`` requests FIFO from the oldest bucket, backfills
+  remaining slots with the next FIFO requests from *other* buckets whose
+  prompts fit (their outputs are kept and counted — idle slots no longer
+  cycle already-admitted prompts), and runs ONE fused adaptive dispatch of
+  ``new_token_bucket`` steps with per-slot positions and per-slot token
+  budgets (a slot that exhausts its budget retires in place);
+* **token mode** (``BatcherConfig.token_granular``): slots retire and admit
+  *mid-flight*.  Decode runs one compiled per-step program
+  (``serve.engine.token_step``) over the slot batch with per-slot cache
+  positions; when a slot finishes, the next FIFO request is prefilled into
+  that slot's cache region (``serve.engine.prefill_one`` +
+  ``splice_slot``) and spliced into the running batch at the next step
+  boundary — no recompiles, no desync of the other slots.  Same prompts,
+  same seeds => per-request tokens bit-identical to the wave oracle
+  (greedy; tested);
+* every compiled program is keyed on shape classes exactly as before (one
+  prefill per prompt bucket, one decode program for the shared
+  ``max_cache_len``); policy re-tunes and ``PolicyReader`` syncs change
+  traced int32 values only — later waves, spliced admissions and adopted
+  policies all reuse the same programs.
 """
 from __future__ import annotations
 
@@ -36,6 +48,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.serve import ServeConfig, generate
+from repro.serve.engine import prefill_one, splice_slot_jit, token_step
 
 __all__ = ["Request", "Completion", "BatcherConfig", "ContinuousBatcher"]
 
@@ -51,7 +64,7 @@ class Request:
 class Completion:
     rid: int
     tokens: np.ndarray          # (max_new,) int32 generated
-    wave: int
+    wave: int                   # wave index (wave mode) / retire step (token)
     prompt_len: int
     bucket: int
 
@@ -64,18 +77,20 @@ class BatcherConfig:
     observe_every: int = 1                 # telemetry decimation inside the scan
     temperature: float = 0.0
     seed: int = 0
+    token_granular: bool = False           # mid-flight slot splicing (greedy)
 
 
 class ContinuousBatcher:
-    """Admission + wave execution over the fused adaptive decode.
+    """Admission + execution over the fused adaptive decode (wave mode) or
+    the per-step token-granular decode (``BatcherConfig.token_granular``).
 
     ``adaptive`` is either the fleet's re-tuning
     :class:`~repro.runtime.AdaptiveController` (the single store writer) or a
     replica-side :class:`~repro.fleet.store.PolicyReader` (synced before each
-    wave); ``None`` serves the static policy through the non-adaptive fused
-    scan (single-host only: the engine's sharded path is the adaptive scan,
-    so ``mesh`` requires ``adaptive``).  ``mesh`` shards each wave's slots
-    over the mesh batch axes.
+    wave / admission); ``None`` serves the static policy (single-host only:
+    the engine's sharded path is the adaptive one, so ``mesh`` requires
+    ``adaptive``).  ``mesh`` shards the decode slots over the mesh batch
+    axes.
     """
 
     def __init__(self, params, cfg: ModelConfig, bcfg: Optional[BatcherConfig] = None,
@@ -86,6 +101,22 @@ class ContinuousBatcher:
         self.params = params
         self.cfg = cfg
         self.bcfg = bcfg or BatcherConfig()
+        # pad-mask prefill (and with it per-slot positions, budgets, and
+        # idle-slot backfill) needs a full-attention stack: ring caches and
+        # recurrent/ssm state would absorb the pad tail.  Other families
+        # keep the PR-3 wave behavior (repeat-pad conditioning, idle slots
+        # cycling admitted prompts).
+        self.padmask = (cfg.family != "encdec" and all(
+            k in ("global", "dense_ffn") for k in cfg.layer_kinds()))
+        if self.bcfg.token_granular:
+            assert self.padmask, (
+                f"token-granular mode needs pad-mask prefill (full-attention "
+                f"stack); {cfg.name} has kinds "
+                f"{sorted(set(cfg.layer_kinds()))}")
+            assert self.bcfg.temperature == 0.0, (
+                "token-granular mode is greedy-only: the wave oracle's "
+                "sampling key chain is shared across the batch, so only "
+                "temperature=0 gives per-request bit-exactness")
         self.adaptive = adaptive
         self.mesh = mesh
         self.par = par
@@ -96,7 +127,8 @@ class ContinuousBatcher:
         self._arrival = 0
         self._order: Dict[int, int] = {}     # rid -> arrival index (FIFO across buckets)
         self.stats = dict(waves=0, requests=0, real_tokens=0, padded_tokens=0,
-                          filler_tokens=0)
+                          filler_tokens=0, backfilled=0, splices=0,
+                          decode_steps=0)
 
     # -- admission -----------------------------------------------------
     def bucket_of(self, prompt_len: int) -> int:
@@ -121,15 +153,35 @@ class ContinuousBatcher:
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
 
-    # -- wave execution ------------------------------------------------
-    def _pick_bucket(self) -> Optional[int]:
-        """Bucket of the oldest waiting request (FIFO fairness across
-        buckets; within a bucket the deque is already FIFO)."""
+    def max_cache_len(self) -> int:
+        """One decode-cache length shared by every bucket: the decode
+        program (and in token mode the step program) compiles once."""
+        return max(self.queues) + self.bcfg.new_token_bucket + 1
+
+    # -- FIFO helpers --------------------------------------------------
+    def _pick_bucket(self, max_prompt_len: Optional[int] = None) -> Optional[int]:
+        """Bucket whose HEAD is the globally oldest waiting request (FIFO
+        fairness across buckets; within a bucket the deque is already FIFO).
+        ``max_prompt_len`` skips buckets whose head doesn't fit."""
         best, best_order = None, None
         for b, q in self.queues.items():
-            if q and (best_order is None or self._order[q[0].rid] < best_order):
+            if not q:
+                continue
+            if max_prompt_len is not None and len(q[0].tokens) > max_prompt_len:
+                continue
+            if best_order is None or self._order[q[0].rid] < best_order:
                 best, best_order = b, self._order[q[0].rid]
         return best
+
+    def _pop_oldest(self, max_prompt_len: Optional[int] = None) -> Optional[Request]:
+        """Pop the globally oldest request (optionally only if its prompt
+        fits ``max_prompt_len``)."""
+        b = self._pick_bucket(max_prompt_len)
+        if b is None:
+            return None
+        req = self.queues[b].popleft()
+        del self._order[req.rid]             # retired rids leave the FIFO map
+        return req                           # (long-running server: no leak)
 
     def _pad(self, tokens: np.ndarray, bucket: int) -> np.ndarray:
         pad = bucket - len(tokens)
@@ -137,6 +189,7 @@ class ContinuousBatcher:
             return tokens[:bucket]
         return np.concatenate([tokens, np.full(pad, tokens[-1], np.int32)])
 
+    # -- wave execution (the bit-exactness oracle) ---------------------
     def step(self) -> List[Completion]:
         """Run one wave; returns the completions it retired (empty when the
         queues are drained)."""
@@ -145,22 +198,47 @@ class ContinuousBatcher:
             return []
         bc = self.bcfg
         q = self.queues[bucket]
-        admitted = [q.popleft() for _ in range(min(bc.n_slots, len(q)))]
-        for req in admitted:                 # retired rids leave the FIFO map
-            del self._order[req.rid]         # (long-running server: no leak)
-        # idle slots cycle the admitted prompts (fixed shape, output discarded)
+        admitted = []
+        while q and len(admitted) < bc.n_slots:
+            req = q.popleft()
+            del self._order[req.rid]
+            admitted.append(req)
+        # backfill idle slots with the next FIFO requests from other buckets
+        # whose prompts fit this wave's bucket — outputs are kept (the old
+        # behavior cycled already-admitted prompts and discarded the copies).
+        # Correct only under pad-mask prefill (a backfilled short prompt
+        # must not condition on its pad tail).
+        n_backfilled = 0
+        while self.padmask and len(admitted) < bc.n_slots:
+            req = self._pop_oldest(max_prompt_len=bucket)
+            if req is None:
+                break
+            admitted.append(req)
+            n_backfilled += 1
+        # remaining idle slots cycle the admitted prompts (fixed shape) with
+        # a 1-token budget: they retire after the prefill sample and stay
+        # inert for the whole wave
         slots = [admitted[i % len(admitted)] for i in range(bc.n_slots)]
+        filler = bc.n_slots - len(admitted)
 
         if self.adaptive is not None and hasattr(self.adaptive, "poll"):
             self.adaptive.poll()             # replica: adopt newer store policy
 
         batch = np.stack([self._pad(r.tokens, bucket) for r in slots])
+        lens = np.asarray([len(r.tokens) for r in slots], np.int32)
+        budgets = np.asarray(
+            [r.max_new if i < len(admitted) else 1
+             for i, r in enumerate(slots)], np.int32)
         scfg = ServeConfig(max_new_tokens=bc.new_token_bucket,
                            temperature=bc.temperature, seed=bc.seed,
                            fused=True, observe_every=bc.observe_every)
+        padmask_kw = (dict(prompt_lens=lens, slot_new_tokens=budgets,
+                           max_cache_len=self.max_cache_len())
+                      if self.padmask else {})
         out = np.asarray(generate(
             self.params, {"tokens": jnp.asarray(batch)}, self.cfg, scfg,
-            par=self.par, adaptive=self.adaptive, mesh=self.mesh))
+            par=self.par, adaptive=self.adaptive, mesh=self.mesh,
+            **padmask_kw))
 
         done = []
         for i, req in enumerate(admitted):
@@ -169,25 +247,133 @@ class ContinuousBatcher:
             self.stats["real_tokens"] += int(req.max_new)
             self.stats["padded_tokens"] += int(
                 bucket - len(req.tokens) + bc.new_token_bucket - req.max_new)
-        self.stats["filler_tokens"] += (
-            (bc.n_slots - len(admitted)) * (bucket + bc.new_token_bucket))
+        self.stats["backfilled"] += n_backfilled
+        self.stats["filler_tokens"] += filler * (bucket + bc.new_token_bucket)
         self.stats["requests"] += len(admitted)
         self.stats["waves"] += 1
+        self.stats["decode_steps"] += bc.new_token_bucket - 1
         self.wave += 1
+        return done
+
+    # -- token-granular execution --------------------------------------
+    def _admit_into(self, slot: int, state: list, pos: np.ndarray,
+                    tok: np.ndarray, cache, key):
+        """Prefill the next FIFO request and splice it into ``slot``'s cache
+        region; returns the (possibly updated) cache.  ``state[slot]`` stays
+        ``None`` when the queues are drained."""
+        req = self._pop_oldest()
+        if req is None:
+            state[slot] = None
+            return cache, []
+        if self.adaptive is not None and hasattr(self.adaptive, "poll"):
+            self.adaptive.poll()
+        L = len(req.tokens)
+        bucket = self.bucket_of(L)
+        padded = self._pad(req.tokens, bucket)
+        first, fresh = prefill_one(
+            self.params, padded[None], L, self.cfg, self.par,
+            max_cache_len=self.max_cache_len(),
+            temperature=self.bcfg.temperature, key=key)
+        cache = splice_slot_jit(cache, fresh, slot)
+        first = int(np.asarray(first)[0])
+        state[slot] = dict(req=req, remaining=req.max_new - 1, toks=[first])
+        pos[slot] = L
+        tok[slot] = first
+        self.stats["requests"] += 1
+        self.stats["real_tokens"] += 1
+        self.stats["padded_tokens"] += bucket - L
+        done = []
+        if state[slot]["remaining"] == 0:    # max_new == 1: retire in place
+            done = self._retire(slot, state)
+        return cache, done
+
+    def _retire(self, slot: int, state: list) -> List[Completion]:
+        st = state[slot]
+        state[slot] = None
+        req = st["req"]
+        return [Completion(req.rid, np.asarray(st["toks"], np.int32),
+                           self.stats["decode_steps"], len(req.tokens),
+                           self.bucket_of(len(req.tokens)))]
+
+    def _run_token_granular(self) -> List[Completion]:
+        """Drain the queues with mid-flight admission: one compiled step
+        program, slots retire and refill at step boundaries."""
+        from repro.models import init_cache
+
+        bc = self.bcfg
+        B = bc.n_slots
+        cache = init_cache(self.cfg, B, self.max_cache_len())
+        key = jax.random.PRNGKey(bc.seed)
+        state: list = [None] * B
+        pos = np.zeros(B, np.int32)
+        tok = np.zeros(B, np.int32)
+        done: List[Completion] = []
+        k_obs = max(1, int(bc.observe_every))
+        pending = None
+
+        for s in range(B):                   # initial admission
+            cache, d = self._admit_into(s, state, pos, tok, cache, key)
+            done.extend(d)
+        while any(st is not None for st in state):
+            active_np = np.asarray([st is not None for st in state])
+            key, sub = jax.random.split(key)
+            gate = (self.stats["decode_steps"] % k_obs == 0)
+            out = token_step(
+                self.params, cache, jnp.asarray(tok), sub,
+                jnp.asarray(pos), jnp.asarray(active_np), self.cfg, self.par,
+                temperature=bc.temperature, adaptive=self.adaptive,
+                mesh=self.mesh, gate=gate)
+            if self.adaptive is not None:
+                tok_d, cache, telem = out
+                if pending is not None:      # one-step-stale observe keeps
+                    self.adaptive.observe(jax.device_get(pending))
+                    pending = None           # the dispatch pipeline warm
+                if gate:
+                    pending = telem
+            else:
+                tok_d, cache = out
+            tok = np.array(tok_d)        # writable copy (splices update rows)
+            pos = pos + active_np
+            n_active = int(active_np.sum())
+            self.stats["real_tokens"] += n_active
+            self.stats["filler_tokens"] += B - n_active
+            self.stats["decode_steps"] += 1
+            for s in range(B):               # retire + splice at the step
+                st = state[s]                # boundary
+                if st is None:
+                    continue
+                st["toks"].append(int(tok[s]))
+                st["remaining"] -= 1
+                if st["remaining"] == 0:
+                    done.extend(self._retire(s, state))
+                    cache, d = self._admit_into(s, state, pos, tok, cache, key)
+                    done.extend(d)
+                    if state[s] is not None:
+                        self.stats["splices"] += 1
+        if pending is not None and self.adaptive is not None:
+            self.adaptive.observe(jax.device_get(pending))
         return done
 
     def run(self) -> List[Completion]:
         """Drain the queues; returns all completions in retirement order."""
+        if self.bcfg.token_granular:
+            return self._run_token_granular()
         out: List[Completion] = []
         while self.pending():
             out.extend(self.step())
         return out
 
-    def describe(self) -> str:
+    def occupancy(self) -> float:
         s = self.stats
         useful = s["real_tokens"]
         total = useful + s["padded_tokens"] + s["filler_tokens"]
-        util = useful / total if total else 1.0
-        return (f"batcher waves={s['waves']} requests={s['requests']} "
-                f"slot_util={util:.2f} (real={useful} padded={s['padded_tokens']} "
+        return useful / total if total else 1.0
+
+    def describe(self) -> str:
+        s = self.stats
+        mode = "token" if self.bcfg.token_granular else "wave"
+        return (f"batcher[{mode}] waves={s['waves']} steps={s['decode_steps']} "
+                f"requests={s['requests']} splices={s['splices']} "
+                f"backfilled={s['backfilled']} slot_util={self.occupancy():.2f} "
+                f"(real={s['real_tokens']} padded={s['padded_tokens']} "
                 f"filler={s['filler_tokens']})")

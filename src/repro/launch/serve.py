@@ -24,6 +24,14 @@ and re-tunes published through the versioned ``PolicyStore``
 (``--policy-store``); each logical replica's ``PolicyReader`` staleness
 (store versions behind CURRENT) is reported at the end.  On CPU, force
 replicas with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+``--token-granular`` (with ``--fleet``) switches the batcher to
+token-granular continuous batching: decode runs one compiled per-step
+program with per-slot cache positions, and a finished slot admits the next
+FIFO request *mid-flight* — its prompt is pad-mask prefilled into the
+slot's cache region and spliced into the running batch at the next step
+boundary (zero recompiles; per-request tokens bit-identical to the
+wave-granular oracle under greedy decoding).
 """
 from __future__ import annotations
 
@@ -100,7 +108,8 @@ def _run_fleet(args, cfg):
     bcfg = BatcherConfig(n_slots=slots,
                          prompt_buckets=(args.prompt_len,),
                          new_token_bucket=args.new_tokens,
-                         temperature=args.temperature)
+                         temperature=args.temperature,
+                         token_granular=args.token_granular)
     bat = ContinuousBatcher(params, cfg, bcfg, adaptive=controller, mesh=mesh)
     # one logical PolicyReader per replica: they adopt the policy current at
     # spin-up and then surface the staleness metric (versions behind
@@ -158,6 +167,10 @@ def main():
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="serve on an N-replica mesh via the continuous "
                          "batcher + policy store (implies --adaptive)")
+    ap.add_argument("--token-granular", action="store_true",
+                    help="--fleet: per-slot cache positions + mid-flight "
+                         "admission (finished slots splice the next FIFO "
+                         "request into the running batch; greedy only)")
     ap.add_argument("--slots", type=int, default=0,
                     help="--fleet decode slots per wave (default max(N, 4))")
     ap.add_argument("--requests", type=int, default=16,

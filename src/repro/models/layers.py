@@ -329,7 +329,8 @@ def attn_init(key, cfg: ModelConfig, dtype):
 def attn_apply(
     p, x, cfg: ModelConfig, *, pos, inv_freq, causal=True, window=0,
     mode="train", cache=None, cache_index=None, max_cache_len=0,
-    q_chunk=512, kv_chunk=1024, cross_kv=None,
+    q_chunk=512, kv_chunk=1024, cross_kv=None, prompt_lens=None,
+    write_mask=None,
 ):
     """GQA attention block.
 
@@ -340,6 +341,16 @@ def attn_apply(
                      ``cache_index`` (mod ring for local layers — positions
                      older than the window being overwritten IS the window
                      mask) and returns the updated cache.
+
+    ``cache_index`` is a scalar (one position for the whole batch, the wave
+    path) or an int32 ``(B,)`` vector (per-slot positions, the token-granular
+    path: each slot writes its own cache row and attends its own prefix
+    length).  ``write_mask`` — optional ``(B,)`` bool gating the per-slot
+    cache write (False rows are dropped, keeping a retired slot's cache
+    region inert).  ``prompt_lens`` — optional ``(B,)`` int32 of real prompt
+    lengths for prefill: right-pad key positions beyond a slot's length are
+    pushed outside every causal window so padded prompts attend only to real
+    tokens.
     """
     B, S, _ = x.shape
     hd = cfg.head_dim_
@@ -358,20 +369,33 @@ def attn_apply(
     new_cache = None
     if mode == "decode" and cross_kv is None:
         ring = cache["k"].shape[1]
-        slot = (cache_index % ring) if window else cache_index
-        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, slot, 0, 0))
+        ci = jnp.asarray(cache_index, jnp.int32)
+        slot = (ci % ring) if window else ci
+        if ci.ndim == 0:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, slot, 0, 0))
+        else:
+            # per-slot positions: each batch row writes its own cache row;
+            # masked rows are redirected out of bounds and dropped, so a
+            # retired slot's cache region stays byte-identical until a fresh
+            # request is spliced in
+            tgt = slot if write_mask is None else jnp.where(write_mask, slot, ring)
+            rows = jnp.arange(B)
+            kc = cache["k"].at[rows, tgt].set(k[:, 0].astype(cache["k"].dtype),
+                                              mode="drop")
+            vc = cache["v"].at[rows, tgt].set(v[:, 0].astype(cache["v"].dtype),
+                                              mode="drop")
         kc = shard(kc, "batch", "kv_seq", "kv_heads", None)
         vc = shard(vc, "batch", "kv_seq", "kv_heads", None)
-        valid = jnp.minimum(cache_index + 1, ring)
+        valid = jnp.minimum(ci + 1, ring)
         # scalar per-batch position (M-RoPE decode uses the temporal stream)
         qp = pos[:, 0] if pos.ndim == 2 else pos[:, 0, 0]
         out = decode_attention(
             q, kc, vc,
             q_pos=(jnp.full((B,), ring - 1, jnp.int32) if window else qp),
-            kv_len=jnp.full((B,), valid, jnp.int32),
+            kv_len=jnp.broadcast_to(valid.astype(jnp.int32), (B,)),
         )
         new_cache = {"k": kc, "v": vc}
     elif mode == "decode":
@@ -388,12 +412,23 @@ def attn_apply(
             )
         else:
             kpos = qpos
+        if prompt_lens is not None and cross_kv is None:
+            # pad-mask prefill: push right-pad key positions outside every
+            # causal window, so real queries attend only to real tokens
+            # (pad queries produce garbage rows that nothing reads — the
+            # engine samples at each slot's last *real* position)
+            idx = jnp.arange(S, dtype=jnp.int32)[None, :]
+            kpos = jnp.where(idx < prompt_lens[:, None], kpos, 2 ** 30)
         out = chunked_attention(
             q, k, v, qpos, kpos, causal=causal, window=window,
             q_chunk=q_chunk, kv_chunk=kv_chunk,
         )
         if mode == "prefill" and cross_kv is None:
             if window:
+                assert prompt_lens is None, (
+                    "pad-mask prefill: ring (sliding-window) caches hold the "
+                    "last `window` positions including pads; token-granular "
+                    "serving supports full-attention cache layouts only")
                 ring = min(window, max_cache_len)
                 take = min(ring, S)
                 import numpy as _np

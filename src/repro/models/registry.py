@@ -45,21 +45,33 @@ def train_loss(params, batch, cfg: ModelConfig, par: Optional[ParallelConfig] = 
     return total, {"ce": loss, "aux": aux}
 
 
-def prefill(params, batch, cfg: ModelConfig, par=None, *, max_cache_len: int):
+def prefill(params, batch, cfg: ModelConfig, par=None, *, max_cache_len: int,
+            prompt_lens=None):
+    """``prompt_lens`` — optional (B,) int32 of real prompt lengths: the
+    pad-mask prefill path (right-padded prompts attend only to real tokens;
+    full-attention stacks only — see ``transformer.forward``)."""
+    if prompt_lens is not None:
+        assert cfg.family != "encdec", "pad-mask prefill: encdec unsupported"
     logits, cache, _ = _mod(cfg).forward(
-        params, batch, cfg, par, mode="prefill", max_cache_len=max_cache_len
+        params, batch, cfg, par, mode="prefill", max_cache_len=max_cache_len,
+        **({} if prompt_lens is None else {"prompt_lens": prompt_lens})
     )
     return logits, cache
 
 
-def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig, par=None):
-    """One serving step: tokens (B, 1) at position ``cache_index``."""
+def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig, par=None,
+                write_mask=None):
+    """One serving step: tokens (B, 1) at position ``cache_index`` — a
+    scalar (whole batch) or an int32 (B,) vector of per-slot positions.
+    ``write_mask`` (B,) bool gates per-slot cache writes (vector path;
+    transformer families only — encdec decode has no per-slot plumbing)."""
+    if write_mask is not None:
+        assert cfg.family != "encdec", "per-slot decode: encdec unsupported"
     batch = {"tokens": tokens}
-    if cfg.family == "vlm":
-        # vlm decode consumes token embeddings from the tied table
-        batch = {"tokens": tokens}
     logits, new_cache, _ = _mod(cfg).forward(
-        params, batch, cfg, par, mode="decode", cache=cache, cache_index=cache_index
+        params, batch, cfg, par, mode="decode", cache=cache,
+        cache_index=cache_index,
+        **({} if write_mask is None else {"write_mask": write_mask})
     )
     return logits, new_cache
 

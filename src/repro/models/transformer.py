@@ -60,7 +60,8 @@ def _layer_init(key, cfg: ModelConfig, kind: str, dtype):
 
 
 def _layer_apply(p, x, cfg: ModelConfig, kind: str, *, pos, inv_freq, mode,
-                 cache=None, cache_index=None, max_cache_len=0):
+                 cache=None, cache_index=None, max_cache_len=0,
+                 prompt_lens=None, write_mask=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
@@ -69,7 +70,8 @@ def _layer_apply(p, x, cfg: ModelConfig, kind: str, *, pos, inv_freq, mode,
         a, new_cache = attn_apply(
             p["attn"], h, cfg, pos=pos, inv_freq=inv_freq, causal=True,
             window=window, mode=mode, cache=cache, cache_index=cache_index,
-            max_cache_len=max_cache_len,
+            max_cache_len=max_cache_len, prompt_lens=prompt_lens,
+            write_mask=write_mask,
         )
     elif kind == "recurrent":
         rc = cache
@@ -218,22 +220,41 @@ def forward(
     cache=None,
     cache_index=None,
     max_cache_len: int = 0,
+    prompt_lens=None,
+    write_mask=None,
 ):
-    """Returns (logits, new_cache, aux_loss)."""
+    """Returns (logits, new_cache, aux_loss).
+
+    ``cache_index`` — decode position: a scalar (whole-batch, the wave path)
+    or an int32 ``(B,)`` vector of per-slot positions (token-granular
+    serving).  ``prompt_lens`` — optional ``(B,)`` real prompt lengths for
+    pad-mask prefill (right-padded prompts attend only to real tokens);
+    requires a full-attention stack (no ring/recurrent/ssm state, which
+    would absorb the pad tail).  ``write_mask`` — optional ``(B,)`` bool
+    gating decode cache writes per slot (retired slots stay inert).
+    """
     par = par or ParallelConfig()
     dtype = jnp.dtype(cfg.compute_dtype)
     st = Stack(cfg)
+    if prompt_lens is not None:
+        assert all(k in ("global", "dense_ffn") for k in cfg.layer_kinds()), (
+            f"pad-mask prefill needs a full-attention stack; "
+            f"{cfg.name} has kinds {sorted(set(cfg.layer_kinds()))}")
     x, pos = _embed_in(params, batch, cfg, dtype)
     x = shard(x, "batch", "seq", None)
     B = x.shape[0]
     if mode == "decode" and "pos" not in batch:
-        pos = jnp.full((B, 1), cache_index, jnp.int32)
+        ci = jnp.asarray(cache_index, jnp.int32)
+        pos = jnp.broadcast_to(ci[:, None] if ci.ndim == 1 else ci, (B, 1))
+        pos = pos.astype(jnp.int32)
         if cfg.mrope:
             pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
     inv_freq = make_rope(cfg.head_dim_, cfg.rope_theta) if cfg.n_heads else None
 
     apply_kw = dict(pos=pos, inv_freq=inv_freq, mode=mode,
-                    cache_index=cache_index, max_cache_len=max_cache_len)
+                    cache_index=cache_index, max_cache_len=max_cache_len,
+                    prompt_lens=prompt_lens if mode != "decode" else None,
+                    write_mask=write_mask if mode == "decode" else None)
     new_cache = {}
     aux = jnp.zeros((), jnp.float32)
 

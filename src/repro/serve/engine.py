@@ -41,6 +41,21 @@ per-tile telemetry record (same scan-carry slots, same gate), and published
 ``SwapPolicy.tile_grids`` land in the compiled step as new traced int32
 values — tile-granular adaptation with zero recompiles, exactly like the
 scalar path (see docs/architecture.md).
+
+**Decode positions are per-slot** (PR 5): every decode path carries an
+int32 ``(B,)`` position vector instead of one scalar index, and per-slot
+done-flags derived from ``slot_new_tokens`` gate sampling (a finished
+slot's token freezes), cache writes (dropped — the slot's cache region
+stays inert until a fresh request is spliced in), and the telemetry
+scatter-add (all-retired steps contribute nothing).  ``prompt_lens``
+switches prefill to the pad-mask path: right-padded prompts attend only to
+real tokens, the first token samples at each slot's last *real* position,
+and decode starts at position ``len`` per slot — a padded prompt's
+generation is bit-identical to the same prompt served unpadded.  On top of
+this, :func:`token_step` exposes a single-compilation per-step decode
+(decode + sample + freeze) used by the token-granular continuous batcher
+(``fleet.scheduler``) to splice new requests into a mid-flight batch at
+step boundaries with zero recompiles.
 """
 from __future__ import annotations
 
@@ -50,11 +65,12 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import decode_step, prefill
 
-__all__ = ["ServeConfig", "generate"]
+__all__ = ["ServeConfig", "generate", "token_step", "prefill_one"]
 
 
 @dataclasses.dataclass
@@ -78,7 +94,8 @@ def _sampler(scfg: ServeConfig):
 
 def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
              par: Optional[ParallelConfig] = None, adaptive=None,
-             param_hook: Optional[Callable] = None, mesh=None):
+             param_hook: Optional[Callable] = None, mesh=None,
+             prompt_lens=None, slot_new_tokens=None, max_cache_len=None):
     """prompt_batch: {'tokens': (B, S)} (or family-specific prefill inputs).
     Returns (B, max_new_tokens) int32.
 
@@ -94,61 +111,133 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
     telemetry is aggregated in-graph (requires ``adaptive`` and
     ``scfg.fused``; greedy decoding is bit-identical to the single-host run,
     temperature sampling draws per-shard).
+    ``prompt_lens`` — optional (B,) int32 of real prompt lengths: prefill
+    runs pad-masked (padded slots attend only to real tokens), the first
+    token samples at each slot's last real position, and decode positions
+    start at ``prompt_lens`` per slot.
+    ``slot_new_tokens`` — optional (B,) int32 per-slot token budgets (each
+    ``<= scfg.max_new_tokens``): a slot that exhausts its budget retires in
+    place — its token freezes (repeated in the output tail), its cache
+    region stops being written, and an all-retired step stops contributing
+    telemetry.
+    ``max_cache_len`` — optional decode-cache length override (the
+    scheduler passes one shared length so every prompt bucket reuses the
+    same compiled decode program).
     """
     S = (prompt_batch["tokens"].shape[1] if "tokens" in prompt_batch
          else prompt_batch["embeds"].shape[1])
     B = jax.tree.leaves(prompt_batch)[0].shape[0]
-    max_len = S + scfg.max_new_tokens + 1
+    max_len = max_cache_len or (S + scfg.max_new_tokens + 1)
+    assert max_len >= S + scfg.max_new_tokens + 1, (max_len, S, scfg)
 
-    logits, cache = prefill(params, prompt_batch, cfg, par, max_cache_len=max_len)
+    # per-slot (vectorized) decode is engaged only when a caller asks for it
+    # (pad-mask prefill / per-slot budgets) or under a mesh (per-slot vectors
+    # shard; scalars would have to be replicated-and-broadcast anyway).  The
+    # default path keeps the scalar position index: one dynamic_update_slice
+    # cache write instead of a per-row scatter, and encdec (whisper) decode
+    # — which has no per-slot plumbing — keeps working.
+    vec = (prompt_lens is not None or slot_new_tokens is not None
+           or mesh is not None)
+    if cfg.family == "encdec":
+        assert not vec, ("per-slot decode (prompt_lens / slot_new_tokens / "
+                         "mesh) is not supported for encdec models")
+
+    pl = (None if prompt_lens is None
+          else jnp.asarray(prompt_lens, jnp.int32).reshape(B))
+    logits, cache = prefill(params, prompt_batch, cfg, par,
+                            max_cache_len=max_len, prompt_lens=pl)
     key = jax.random.PRNGKey(scfg.seed)
     sample = _sampler(scfg)
-    tok = sample(logits, key)
+    if pl is None:
+        tok = sample(logits, key)
+    else:
+        # pad-mask path: the next token conditions on the last REAL prompt
+        # position, not the pad tail
+        tok = sample(logits[jnp.arange(B), pl - 1][:, None], key)
+    n_steps = scfg.max_new_tokens - 1
+    if vec:
+        pos0 = pl if pl is not None else jnp.full((B,), S, jnp.int32)
+        budget = (jnp.full((B,), n_steps, jnp.int32)
+                  if slot_new_tokens is None
+                  else jnp.asarray(slot_new_tokens, jnp.int32).reshape(B) - 1)
+    else:
+        pos0, budget = jnp.int32(S), None      # scalar legacy path
 
     if adaptive is None and param_hook is None and scfg.fused:
         assert mesh is None, "mesh= requires the adaptive fused path"
-        return _generate_fused(params, cache, tok, key, S, cfg, scfg, par)
+        return _generate_fused(params, cache, tok, key, pos0, budget, cfg,
+                               scfg, par)
     if adaptive is not None and param_hook is None and scfg.fused:
-        return _generate_fused_adaptive(params, cache, tok, key, S, B, cfg,
-                                        scfg, par, adaptive, mesh)
+        return _generate_fused_adaptive(params, cache, tok, key, pos0, budget,
+                                        B, cfg, scfg, par, adaptive, mesh)
     assert mesh is None, "mesh= requires the adaptive fused path (no param_hook)"
-    return _generate_stepwise(params, cache, tok, key, S, cfg, scfg, par,
-                              adaptive, param_hook)
+    return _generate_stepwise(params, cache, tok, key, pos0, budget, cfg,
+                              scfg, par, adaptive, param_hook)
 
 
 @functools.lru_cache(maxsize=64)
-def _fused_decode_fn(cfg, par, n_steps: int, temperature: float):
+def _fused_decode_fn(cfg, par, n_steps: int, temperature: float,
+                     vectorized: bool = False):
     """Build (and cache) the jitted whole-loop decode scan.  Keyed on the
     hashable configs so repeated ``generate`` calls reuse the compiled
-    program; the prompt length enters as a traced ``start`` index, so prompt
-    shape changes retrace only via ``prefill``/cache shapes."""
+    program.  The scalar variant takes one traced ``start`` index (the
+    pre-PR5 program: one dynamic_update_slice cache write per step); the
+    ``vectorized`` variant takes per-slot (B,) positions and token budgets
+    as traced vectors, so retired slots freeze without a branch."""
     scfg = ServeConfig(temperature=temperature)
     sample = _sampler(scfg)
 
-    @jax.jit
-    def decode_scan(params, cache, tok0, key0, start):
-        def step(carry, i):
-            tok, cache, key = carry
-            key, sub = jax.random.split(key)
-            logits, cache = decode_step(params, cache, tok[:, None],
-                                        start + i, cfg, par)
-            tok = sample(logits, sub)
-            return (tok, cache, key), tok
+    if not vectorized:
+        @jax.jit
+        def decode_scan(params, cache, tok0, key0, start):
+            def step(carry, i):
+                tok, cache, key = carry
+                key, sub = jax.random.split(key)
+                logits, cache = decode_step(params, cache, tok[:, None],
+                                            start + i, cfg, par)
+                tok = sample(logits, sub)
+                return (tok, cache, key), tok
 
-        (_, _, _), toks = jax.lax.scan(
-            step, (tok0, cache, key0), jnp.arange(n_steps, dtype=jnp.int32))
+            (_, _, _), toks = jax.lax.scan(
+                step, (tok0, cache, key0),
+                jnp.arange(n_steps, dtype=jnp.int32))
+            return toks                               # (n_steps, B)
+
+        return decode_scan
+
+    @jax.jit
+    def decode_scan(params, cache, tok0, key0, pos0, budget):
+        def step(carry, i):
+            tok, cache, key, pos = carry
+            key, sub = jax.random.split(key)
+            active = i < budget                        # (B,) done-flags
+            logits, cache = decode_step(params, cache, tok[:, None],
+                                        pos, cfg, par, write_mask=active)
+            tok = jnp.where(active, sample(logits, sub), tok)
+            pos = pos + active.astype(jnp.int32)
+            return (tok, cache, key, pos), tok
+
+        (_, _, _, _), toks = jax.lax.scan(
+            step, (tok0, cache, key0, pos0),
+            jnp.arange(n_steps, dtype=jnp.int32))
         return toks                                   # (n_steps, B)
 
     return decode_scan
 
 
-def _generate_fused(params, cache, tok, key, S, cfg, scfg: ServeConfig, par):
-    """The whole decode loop (step + sample) as one on-device ``lax.scan``."""
+def _generate_fused(params, cache, tok, key, pos0, budget, cfg,
+                    scfg: ServeConfig, par):
+    """The whole decode loop (step + sample) as one on-device ``lax.scan``.
+    ``budget is None`` selects the scalar (pre-PR5) program."""
     n_steps = scfg.max_new_tokens - 1
     if n_steps <= 0:
         return tok[:, None]
-    decode_scan = _fused_decode_fn(cfg, par, n_steps, scfg.temperature)
-    toks = decode_scan(params, cache, tok, key, jnp.int32(S))
+    decode_scan = _fused_decode_fn(cfg, par, n_steps, scfg.temperature,
+                                   vectorized=budget is not None)
+    if budget is None:
+        toks = decode_scan(params, cache, tok, key, pos0)
+    else:
+        toks = decode_scan(params, cache, tok, key, pos0, budget)
     return jnp.concatenate([tok[:, None], jnp.swapaxes(toks, 0, 1)], axis=1)
 
 
@@ -162,7 +251,7 @@ _ADAPTIVE_FNS = {}
 
 def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
                         k_obs: int, mesh, cache, batch: int,
-                        tile_rows: int = 0):
+                        tile_rows: int = 0, vectorized: bool = False):
     """Build (and cache) the fused adaptive decode: one ``lax.scan`` over the
     token loop with telemetry threaded through the scan carry, optionally
     shard_map'd over the mesh batch axes with in-graph record aggregation.
@@ -172,10 +261,18 @@ def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
     records (they ride the same scan-carry slots — just more record
     fields), and the compiled program is keyed on the granularity, so
     scalar and tile policies each compile once and re-tunes never retrace
-    either."""
+    either.
+
+    ``vectorized`` (always on under a mesh) switches from the scalar
+    ``start`` index to per-slot (B,) positions and budgets plus a
+    *replicated* ``bmax`` scalar: the observe gate is ``(i % k_obs == 0) &
+    (i < bmax)`` — equal to "any slot still live" but computed from the
+    global budget maximum, so it is identical on every shard (a per-shard
+    ``any(active)`` would let a fully-retired shard drop out of the psum
+    while the single-host oracle still counts its frozen slots)."""
     treedef = jax.tree_util.tree_structure(cache)
     key = (cfg, par, n_steps, temperature, k_obs, mesh, treedef, batch,
-           tile_rows)
+           tile_rows, vectorized)
     if key in _ADAPTIVE_FNS:
         return _ADAPTIVE_FNS[key]
 
@@ -188,43 +285,76 @@ def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
     n_obs = -(-n_steps // k_obs)          # carry slots: one per gated step
 
     if mesh is not None:
+        assert vectorized, "the sharded adaptive decode is the vectorized one"
         from repro.fleet.collect import aggregate_records, shard_decode_specs, shard_map
 
         in_specs, out_specs, axes = shard_decode_specs(cache, batch, mesh)
     else:
         axes = ()
 
-    def decode_scan(params, cache, tok0, key0, start, dyn):
-        def probe(params, cache, tok0, start, dyn):
+    def _probe_bufs(params, cache, tok0, pos0, dyn):
+        def probe(params, cache, tok0, pos0, dyn):
             with ax_scope(dyn, collect=True, tile_rows=tile_rows) as sc:
-                decode_step(params, cache, tok0[:, None], start, cfg, dec_par)
+                decode_step(params, cache, tok0[:, None], pos0, cfg, dec_par)
                 return sc.collected()
 
-        shapes = jax.eval_shape(probe, params, cache, tok0, start, dyn)
-        bufs0 = jax.tree.map(
+        shapes = jax.eval_shape(probe, params, cache, tok0, pos0, dyn)
+        return jax.tree.map(
             lambda s: jnp.zeros((n_obs,) + s.shape, s.dtype), shapes)
 
-        def step(carry, i):
-            tok, cache, key, bufs = carry
-            key, sub = jax.random.split(key)
-            gate = (i % k_obs) == 0
-            with ax_scope(dyn, collect=True, gate=gate,
-                          tile_rows=tile_rows) as sc:
-                logits, cache = decode_step(params, cache, tok[:, None],
-                                            start + i, cfg, dec_par)
-                telem = sc.collected()
-            tok = sample(logits, sub)
-            # off-steps produced lax.cond zeros, so the unconditional
-            # scatter-add leaves exactly the gated step's record in its slot
-            bufs = jax.tree.map(lambda b, r: b.at[i // k_obs].add(r),
-                                bufs, telem)
-            return (tok, cache, key, bufs), tok
+    if not vectorized:
+        def decode_scan(params, cache, tok0, key0, start, dyn):
+            bufs0 = _probe_bufs(params, cache, tok0, start, dyn)
 
-        (_, _, _, bufs), toks = jax.lax.scan(
-            step, (tok0, cache, key0, bufs0),
-            jnp.arange(n_steps, dtype=jnp.int32))
-        bufs = aggregate_records(bufs, axes) if axes else bufs
-        return toks, bufs                       # (n_steps, B), slot records
+            def step(carry, i):
+                tok, cache, key, bufs = carry
+                key, sub = jax.random.split(key)
+                gate = (i % k_obs) == 0
+                with ax_scope(dyn, collect=True, gate=gate,
+                              tile_rows=tile_rows) as sc:
+                    logits, cache = decode_step(params, cache, tok[:, None],
+                                                start + i, cfg, dec_par)
+                    telem = sc.collected()
+                tok = sample(logits, sub)
+                # off-steps produced lax.cond zeros, so the unconditional
+                # scatter-add leaves exactly the gated step's record in its
+                # slot
+                bufs = jax.tree.map(lambda b, r: b.at[i // k_obs].add(r),
+                                    bufs, telem)
+                return (tok, cache, key, bufs), tok
+
+            (_, _, _, bufs), toks = jax.lax.scan(
+                step, (tok0, cache, key0, bufs0),
+                jnp.arange(n_steps, dtype=jnp.int32))
+            return toks, bufs                   # (n_steps, B), slot records
+    else:
+        def decode_scan(params, cache, tok0, key0, pos0, budget, bmax, dyn):
+            bufs0 = _probe_bufs(params, cache, tok0, pos0, dyn)
+
+            def step(carry, i):
+                tok, cache, key, pos, bufs = carry
+                key, sub = jax.random.split(key)
+                active = i < budget              # (B,) per-slot done-flags
+                # shard-invariant live gate (see docstring): bmax is the
+                # global budget max, replicated under the mesh
+                gate = ((i % k_obs) == 0) & (i < bmax)
+                with ax_scope(dyn, collect=True, gate=gate,
+                              tile_rows=tile_rows) as sc:
+                    logits, cache = decode_step(params, cache, tok[:, None],
+                                                pos, cfg, dec_par,
+                                                write_mask=active)
+                    telem = sc.collected()
+                tok = jnp.where(active, sample(logits, sub), tok)
+                pos = pos + active.astype(jnp.int32)
+                bufs = jax.tree.map(lambda b, r: b.at[i // k_obs].add(r),
+                                    bufs, telem)
+                return (tok, cache, key, pos, bufs), tok
+
+            (_, _, _, _, bufs), toks = jax.lax.scan(
+                step, (tok0, cache, key0, pos0, bufs0),
+                jnp.arange(n_steps, dtype=jnp.int32))
+            bufs = aggregate_records(bufs, axes) if axes else bufs
+            return toks, bufs                   # (n_steps, B), slot records
 
     if mesh is not None:
         decode_scan = shard_map(decode_scan, mesh=mesh, in_specs=in_specs,
@@ -234,7 +364,7 @@ def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
     return fn
 
 
-def _generate_fused_adaptive(params, cache, tok, key, S, B, cfg,
+def _generate_fused_adaptive(params, cache, tok, key, pos0, budget, B, cfg,
                              scfg: ServeConfig, par, adaptive, mesh):
     """Whole adaptive decode loop as one dispatch: run the telemetry-carrying
     scan, then fold each observed slot's fleet record into the controller (in
@@ -245,8 +375,13 @@ def _generate_fused_adaptive(params, cache, tok, key, S, B, cfg,
     k_obs = max(1, int(scfg.observe_every))
     fn = _adaptive_decode_fn(cfg, par, n_steps, scfg.temperature, k_obs,
                              mesh, cache, B,
-                             tile_rows=getattr(adaptive, "tile_rows", 0))
-    toks, bufs = fn(params, cache, tok, key, jnp.int32(S), adaptive.dyn_tree())
+                             tile_rows=getattr(adaptive, "tile_rows", 0),
+                             vectorized=budget is not None)
+    if budget is None:
+        toks, bufs = fn(params, cache, tok, key, pos0, adaptive.dyn_tree())
+    else:
+        toks, bufs = fn(params, cache, tok, key, pos0, budget,
+                        jnp.max(budget), adaptive.dyn_tree())
     out = jnp.concatenate([tok[:, None], jnp.swapaxes(toks, 0, 1)], axis=1)
     bufs = jax.device_get(bufs)
     for j in range(-(-n_steps // k_obs)):
@@ -255,14 +390,20 @@ def _generate_fused_adaptive(params, cache, tok, key, S, B, cfg,
     return out
 
 
-def _generate_stepwise(params, cache, tok, key, S, cfg, scfg: ServeConfig, par,
-                       adaptive, param_hook):
+def _generate_stepwise(params, cache, tok, key, pos0, budget, cfg,
+                       scfg: ServeConfig, par, adaptive, param_hook):
     """One host-dispatched decode step per token: the adaptive/telemetry path
-    and the ``param_hook`` path (also the fused path's correctness oracle)."""
+    and the ``param_hook`` path (also the fused paths' correctness oracle).
+    ``budget is None`` is the scalar (pre-PR5) loop; otherwise positions,
+    done-flags and gated cache writes mirror the vectorized scans exactly
+    (bit-identical tokens and telemetry, including the ``i < max(budget)``
+    observe gate)."""
     out = [tok]
+    vec = budget is not None
 
     if adaptive is None:
-        step_fn = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg, par))
+        step_fn = jax.jit(lambda p, c, t, i, m: decode_step(
+            p, c, t, i, cfg, par, write_mask=m))
     else:
         from repro.runtime import ax_scope
 
@@ -274,27 +415,37 @@ def _generate_stepwise(params, cache, tok, key, S, cfg, scfg: ServeConfig, par,
         dec_par = dataclasses.replace(par or ParallelConfig(), scan_layers=False)
         tile_rows = getattr(adaptive, "tile_rows", 0)
 
-        def _adaptive_step(p, c, t, i, dyn, gate):
+        def _adaptive_step(p, c, t, i, m, dyn, gate):
             with ax_scope(dyn, collect=True, gate=gate,
                           tile_rows=tile_rows) as sc:
-                logits, new_cache = decode_step(p, c, t, i, cfg, dec_par)
+                logits, new_cache = decode_step(p, c, t, i, cfg, dec_par,
+                                                write_mask=m)
                 return logits, new_cache, sc.collected()
 
         step_fn = jax.jit(_adaptive_step)
 
     sample = _sampler(scfg)
     k_obs = max(1, int(scfg.observe_every))
+    budget_np = np.asarray(budget) if vec else None
+    pos = pos0
     pending = None   # one-step-stale observe: fetch step i-1's telemetry only
     for i in range(scfg.max_new_tokens - 1):   # after step i is dispatched, so
         key, sub = jax.random.split(key)       # async dispatch stays pipelined
         if param_hook is not None:
             params = param_hook(i, params)
-        if adaptive is None:
-            logits, cache = step_fn(params, cache, tok[:, None], jnp.int32(S + i))
+        if vec:
+            active_np = i < budget_np          # (B,) host-known done-flags
+            active = jnp.asarray(active_np)
+            alive = bool(i < budget_np.max())  # == the scans' i < bmax gate
         else:
-            gate = (i % k_obs == 0)
+            active, alive = None, True
+        idx = pos if vec else jnp.int32(pos + i)
+        if adaptive is None:
+            logits, cache = step_fn(params, cache, tok[:, None], idx, active)
+        else:
+            gate = (i % k_obs == 0) and alive
             logits, cache, telem = step_fn(
-                params, cache, tok[:, None], jnp.int32(S + i),
+                params, cache, tok[:, None], idx, active,
                 adaptive.dyn_tree(), jnp.bool_(gate)
             )
             if pending is not None:
@@ -302,8 +453,163 @@ def _generate_stepwise(params, cache, tok, key, S, cfg, scfg: ServeConfig, par,
                 pending = None
             if gate:       # off-steps produced zero records (lax.cond) —
                 pending = telem   # never surface them to the controller
-        tok = sample(logits, sub)
+        if vec:
+            tok = jnp.where(active, sample(logits, sub), tok)
+            pos = pos + active.astype(jnp.int32)
+        else:
+            tok = sample(logits, sub)
         out.append(tok)
     if pending is not None:
         adaptive.observe(jax.device_get(pending))
     return jnp.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# token-granular serving: one compiled per-step decode + per-bucket prefill
+# ---------------------------------------------------------------------------
+
+# token-step program cache: (cfg, par, temperature, adaptive?, k_obs-free —
+# the gate is a traced bool, mesh, cache treedef, batch, tile_rows) ->
+# jitted step.  ONE entry serves the whole trace: mid-flight admissions and
+# policy updates change traced values only (tests assert _cache_size() == 1).
+_TOKEN_FNS = {}
+
+
+def _token_step_fn(cfg, par, temperature: float, adaptive: bool, mesh,
+                   cache, batch: int, tile_rows: int = 0):
+    """Build (and cache) the jitted token-granular decode step:
+    ``(params, cache, tok, sub, pos, active[, dyn, gate]) ->
+    (tok', cache'[, telem])``.
+
+    Decode + sampling + per-slot freeze run as one dispatch per token for
+    the WHOLE slot batch; ``pos`` is the (B,) per-slot position vector and
+    ``active`` the (B,) done-flags (False slots keep their token, skip
+    their cache write, and — all-False — skip the telemetry summary).
+    Under ``mesh`` the step is shard_map'd over the mesh batch axes with
+    in-graph telemetry aggregation, exactly like the fused adaptive scan.
+    """
+    treedef = jax.tree_util.tree_structure(cache)
+    fkey = (cfg, par, temperature, adaptive, mesh, treedef, batch, tile_rows)
+    if fkey in _TOKEN_FNS:
+        return _TOKEN_FNS[fkey]
+
+    sample = _sampler(ServeConfig(temperature=temperature))
+    if mesh is not None:
+        from repro.fleet.collect import (aggregate_records, shard_map,
+                                         token_step_specs)
+
+        in_specs, out_specs, axes = token_step_specs(cache, batch, mesh)
+    else:
+        axes = ()
+
+    if adaptive:
+        from repro.runtime import ax_scope
+
+        dec_par = dataclasses.replace(par or ParallelConfig(),
+                                      scan_layers=False)
+
+        # the host only steps a batch with >= 1 live slot (the scheduler's
+        # drain loop), so `gate` alone is the full observe condition — and
+        # unlike an in-graph any(active) it is identical on every shard
+        def step(params, cache, tok, sub, pos, active, dyn, gate):
+            with ax_scope(dyn, collect=True, gate=gate,
+                          tile_rows=tile_rows) as sc:
+                logits, cache = decode_step(params, cache, tok[:, None],
+                                            pos, cfg, dec_par,
+                                            write_mask=active)
+                telem = sc.collected()
+            tok = jnp.where(active, sample(logits, sub), tok)
+            telem = aggregate_records(telem, axes) if axes else telem
+            return tok, cache, telem
+    else:
+        assert mesh is None, "mesh= requires the adaptive token step"
+
+        def step(params, cache, tok, sub, pos, active):
+            logits, cache = decode_step(params, cache, tok[:, None], pos,
+                                        cfg, par, write_mask=active)
+            return jnp.where(active, sample(logits, sub), tok), cache
+
+    if mesh is not None:
+        step = shard_map(step, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    fn = jax.jit(step)
+    _TOKEN_FNS[fkey] = fn
+    return fn
+
+
+def token_step(params, cache, tok, sub, pos, active, cfg: ModelConfig,
+               par: Optional[ParallelConfig] = None, *, temperature: float = 0.0,
+               adaptive=None, mesh=None, gate=True):
+    """One token-granular decode step (see :func:`_token_step_fn`).
+
+    Returns ``(tok', cache')`` — plus the telemetry record tree when
+    ``adaptive`` is attached (pass it to ``adaptive.observe`` after a
+    ``device_get``; off-``gate`` steps return lax.cond zeros that must not
+    reach the controller, mirroring the stepwise loop).
+    """
+    B = int(tok.shape[0])
+    fn = _token_step_fn(cfg, par, temperature, adaptive is not None, mesh,
+                        cache, B, tile_rows=getattr(adaptive, "tile_rows", 0))
+    if adaptive is None:
+        return fn(params, cache, tok, sub, pos, active)
+    return fn(params, cache, tok, sub, pos, active, adaptive.dyn_tree(),
+              jnp.bool_(gate))
+
+
+@functools.lru_cache(maxsize=64)
+def _prefill_one_fn(cfg, par, bucket: int, max_cache_len: int,
+                    temperature: float):
+    """Jitted single-request prefill for one prompt bucket: pad-masked
+    forward, first token sampled at the last real position, cache padded to
+    the shared ``max_cache_len`` so it splices straight into any slot of
+    the token-granular decode cache."""
+    sample = _sampler(ServeConfig(temperature=temperature))
+
+    @jax.jit
+    def fn(params, toks, lens, key):
+        logits, cache = prefill(params, {"tokens": toks}, cfg, par,
+                                max_cache_len=max_cache_len,
+                                prompt_lens=lens)
+        lg = logits[jnp.arange(toks.shape[0]), lens - 1][:, None]
+        return sample(lg, key), cache
+
+    return fn
+
+
+def prefill_one(params, tokens, length: int, cfg: ModelConfig,
+                par: Optional[ParallelConfig] = None, *, max_cache_len: int,
+                temperature: float = 0.0, key=None):
+    """Prefill ONE padded request ``tokens`` (1, bucket) with real length
+    ``length``; returns ``(first_token (1,), cache)`` with the cache padded
+    to ``max_cache_len``.  Compiled once per prompt bucket."""
+    fn = _prefill_one_fn(cfg, par, int(tokens.shape[1]), int(max_cache_len),
+                         temperature)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return fn(params, jnp.asarray(tokens, jnp.int32),
+              jnp.asarray([length], jnp.int32), key)
+
+
+def splice_slot(cache, fresh, slot):
+    """Write single-request decode-cache ``fresh`` (batch dim 1) into row
+    ``slot`` of the slot-batched ``cache`` — the mid-flight admission
+    splice.  The batch dim is axis 1 for scan-stacked ``stack/`` leaves and
+    axis 0 elsewhere (same layout rule as ``fleet.collect.cache_pspecs``);
+    ``slot`` is traced, so one compiled program serves every slot."""
+
+    def one(path, big, small):
+        bdim = 1 if (path and getattr(path[0], "key", None) == "stack") else 0
+        start = [jnp.int32(0)] * big.ndim
+        start[bdim] = jnp.asarray(slot, jnp.int32)
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                            tuple(start))
+
+    return jax.tree_util.tree_map_with_path(one, cache, fresh)
+
+
+_SPLICE_FN = jax.jit(splice_slot)
+
+
+def splice_slot_jit(cache, fresh, slot):
+    """Jitted :func:`splice_slot` (one program per cache treedef)."""
+    return _SPLICE_FN(cache, fresh, jnp.int32(slot))

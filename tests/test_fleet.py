@@ -377,6 +377,7 @@ print("RESULT:" + json.dumps(res))
 """
 
 
+@pytest.mark.multidevice
 def test_sharded_psum_and_fleet_retune_8dev():
     r = _run_sub(_PSUM_AND_RETUNE_SCRIPT)
     assert r["devices"] == 8
@@ -449,6 +450,7 @@ print("RESULT:" + json.dumps(res))
 """
 
 
+@pytest.mark.multidevice
 def test_sharded_adaptive_decode_bit_identical_8dev():
     """ISSUE acceptance: sharded adaptive decode == single-host unrolled
     adaptive loop (tokens + telemetry sums) with zero recompiles."""

@@ -418,6 +418,7 @@ print("RESULT:" + json.dumps(res))
 """
 
 
+@pytest.mark.multidevice
 def test_tile_records_psum_bitexact_8dev():
     """ISSUE acceptance: tile histograms psum-aggregate correctly on a
     forced 8-device mesh (bit-exact vs the host combine oracle), and the
