@@ -8,7 +8,7 @@ artifact against the committed baseline and fails on any counter that got
 worse; wall-time movement is reported informationally only.
 
     PYTHONPATH=src python -m benchmarks.run --quick --check \
-        [--baseline benchmarks/baselines/BENCH_4.json]
+        [--baseline benchmarks/baselines/BENCH_5.json]
 """
 from __future__ import annotations
 
@@ -20,7 +20,13 @@ __all__ = ["RULES", "WALL_NOTES", "check", "check_files"]
 # (dotted path, rule): 'le' — new value must not exceed baseline;
 # 'true' — must be truthy in the new artifact; 'ge:<other path>' — must be
 # >= another value of the SAME (new) artifact (cross-section invariants,
-# e.g. token-granular occupancy must meet the wave baseline it replaces).
+# e.g. token-granular occupancy must meet the wave baseline it replaces);
+# 'ratio>=<min>' — the value (already a ratio in the artifact, e.g. a
+# speedup) must meet an absolute floor, independent of any baseline: a
+# wall-derived ratio of two measurements taken on the SAME host in the SAME
+# run divides the host speed out, so unlike raw wall time it can gate —
+# floors sit well under the observed container values (0.80-0.92) to
+# absorb CI noise while still catching a path collapsing.
 # Paths missing from either side are skipped (older baselines predate newer
 # sections).
 RULES = [
@@ -43,6 +49,15 @@ RULES = [
     ("serving.bit_identical_requests", "true"),
     ("serving.zero_recompiles", "true"),
     ("serving.token_granular_occupancy", "ge:serving.wave_occupancy"),
+    # observability (PR 6): the live recompile gauge the scheduler asserts
+    # on — decode retraces after warmup must be exactly zero
+    ("serving.decode_retraces_post_warmup", "le"),
+    # ratio floors (PR 6): Pallas slab + K-stacked dynamic-dispatch
+    # speedups are same-run wall ratios, gated against absolute minima
+    ("kernel_reduction.static_speedup", "ratio>=0.6"),
+    ("kernel_reduction.grid_speedup", "ratio>=0.6"),
+    ("matmul_dispatch.dyn_speedup", "ratio>=0.6"),
+    ("matmul_dispatch.static_speedup", "ratio>=0.6"),
 ]
 
 # informational wall-time trajectory (never gating)
@@ -53,6 +68,9 @@ WALL_NOTES = [
     "decode.scan_steps_per_s",
     "serving.wave_tokens_per_s",
     "serving.token_granular_tokens_per_s",
+    "serving.wave_e2e_p99_s",
+    "serving.token_e2e_p99_s",
+    "serving.token_ttft_p99_s",
 ]
 
 
@@ -74,6 +92,17 @@ def check(new: dict, baseline: dict) -> Tuple[List[str], List[str]]:
                 continue
             if not nv:
                 failures.append(f"{path}: expected truthy, got {nv!r}")
+            continue
+        if rule.startswith("ratio>="):
+            # absolute floor on a same-run wall ratio — no baseline involved
+            floor = float(rule[len("ratio>="):])
+            if nv is None:
+                continue
+            if nv < floor:
+                failures.append(
+                    f"{path}: {nv:.3f} < floor {floor} (path collapsed)")
+            else:
+                notes.append(f"{path}: {nv:.3f} >= floor {floor} ok")
             continue
         if rule.startswith("ge:"):
             # same-artifact invariant: both sides read from the NEW artifact

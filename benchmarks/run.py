@@ -5,10 +5,10 @@
 Prints each table and a ``name,us_per_call,derived`` CSV summary line per
 benchmark (derived = the table's headline number).  Also runs the hot-path
 perf microbenchmarks plus the fleet- and token-granular-serving
-microbenchmarks and writes ``BENCH_5.json`` (dispatch / reduction / decode /
+microbenchmarks and writes ``BENCH_6.json`` (dispatch / reduction / decode /
 fleet / tile-adaptation / serving numbers — this PR's point on the perf
 trajectory).  ``--check`` then diffs the artifact's deterministic counters
-against the committed baseline (``benchmarks/baselines/BENCH_4.json``) and
+against the committed baseline (``benchmarks/baselines/BENCH_5.json``) and
 exits non-zero on regression — wall times are reported informationally only
 (see ``benchmarks.regress``).
 """
@@ -26,11 +26,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small fast subset")
     ap.add_argument("--full", action="store_true", help="all multipliers + ALL parts")
-    ap.add_argument("--bench-out", default="BENCH_5.json",
+    ap.add_argument("--bench-out", default="BENCH_6.json",
                     help="perf/fleet/tile/serving JSON artifact path")
     ap.add_argument("--check", action="store_true",
                     help="fail on deterministic-counter regression vs --baseline")
-    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_4.json",
+    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_5.json",
                     help="committed baseline artifact for --check")
     args = ap.parse_args()
 

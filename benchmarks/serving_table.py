@@ -98,6 +98,12 @@ def run(quick: bool = False):
 
     wave_toks, wave_bat, wave_tps = serve(False)
     tok_toks, tok_bat, tok_tps = serve(True)
+    # per-request latency percentiles off the batchers' request logs
+    # (submit -> first token / retirement; wave TTFT == e2e by construction
+    # — the whole wave is one fused dispatch).  Wall-clock: informational
+    # on CPU, the deterministic fields below stay the gates.
+    wave_lat = wave_bat.latency_summary()
+    tok_lat = tok_bat.latency_summary()
 
     bit_identical = (set(wave_toks) == set(tok_toks)
                      and all(wave_toks[r] == tok_toks[r] for r in wave_toks))
@@ -133,19 +139,40 @@ def run(quick: bool = False):
         "wave_backfilled": wave_bat.stats["backfilled"],
         "bit_identical_requests": bool(bit_identical),
         "zero_recompiles": zero_recompiles,
+        "decode_retraces_post_warmup":
+            tok_bat.stats["decode_retraces_post_warmup"],
+        "wave_ttft_p50_s": wave_lat.get("ttft_p50"),
+        "wave_ttft_p99_s": wave_lat.get("ttft_p99"),
+        "wave_e2e_p50_s": wave_lat.get("e2e_p50"),
+        "wave_e2e_p99_s": wave_lat.get("e2e_p99"),
+        "token_ttft_p50_s": tok_lat.get("ttft_p50"),
+        "token_ttft_p99_s": tok_lat.get("ttft_p99"),
+        "token_e2e_p50_s": tok_lat.get("e2e_p50"),
+        "token_e2e_p99_s": tok_lat.get("e2e_p99"),
     }
+
+
+def _ms(v) -> str:
+    return "-" if v is None else f"{v * 1e3:.0f}ms"
 
 
 def format_table(out) -> str:
     lines = [
         "Serving — wave vs token-granular continuous batching (PR 5)",
         f"trace: {out['requests']} requests, {out['trace']}",
-        f"{'mode':16s} {'occupancy':>10s} {'tokens/s*':>10s}",
+        (f"{'mode':16s} {'occupancy':>10s} {'tokens/s*':>10s} "
+         f"{'ttft_p50*':>10s} {'ttft_p99*':>10s} {'e2e_p99*':>10s}"),
         (f"{'wave':16s} {out['wave_occupancy']:>10.2f} "
-         f"{out['wave_tokens_per_s']:>10.1f}   "
+         f"{out['wave_tokens_per_s']:>10.1f} "
+         f"{_ms(out['wave_ttft_p50_s']):>10s} "
+         f"{_ms(out['wave_ttft_p99_s']):>10s} "
+         f"{_ms(out['wave_e2e_p99_s']):>10s}   "
          f"({out['wave_waves']} waves, {out['wave_backfilled']} backfilled)"),
         (f"{'token-granular':16s} {out['token_granular_occupancy']:>10.2f} "
-         f"{out['token_granular_tokens_per_s']:>10.1f}   "
+         f"{out['token_granular_tokens_per_s']:>10.1f} "
+         f"{_ms(out['token_ttft_p50_s']):>10s} "
+         f"{_ms(out['token_ttft_p99_s']):>10s} "
+         f"{_ms(out['token_e2e_p99_s']):>10s}   "
          f"({out['token_splices']} mid-flight splices)"),
         f"per-request tokens bit-identical to wave oracle: "
         f"{out['bit_identical_requests']}",

@@ -40,17 +40,56 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.serve import ServeConfig, generate
 from repro.serve.engine import prefill_one, splice_slot_jit, token_step
 
 __all__ = ["Request", "Completion", "BatcherConfig", "ContinuousBatcher"]
+
+# host-side observability (repro.obs; see docs/observability.md).  TTFT in
+# wave mode equals e2e at wave granularity (the whole wave is one fused
+# dispatch — a request's first token only materializes when the wave
+# lands); token mode reports the real first-token latency, measured at the
+# admission splice.  All instrumentation sits outside traced code.
+_REG = obs.default_registry()
+_OCCUPANCY = _REG.gauge(
+    "repro_batcher_occupancy",
+    "useful-token fraction of all decode-slot token positions (by mode)")
+_QUEUE_DEPTH = _REG.gauge(
+    "repro_queue_depth", "waiting requests per prompt bucket")
+_ADMISSIONS = _REG.counter(
+    "repro_admissions_total", "requests admitted into decode slots (by mode)")
+_BACKFILLS = _REG.counter(
+    "repro_backfills_total",
+    "wave-mode idle slots backfilled from other buckets' FIFO heads")
+_SPLICES = _REG.counter(
+    "repro_splices_total",
+    "token-mode mid-flight admissions spliced into a live batch")
+_TTFT = _REG.histogram(
+    "repro_request_ttft_seconds",
+    "submit -> first token (wave mode: == e2e at wave granularity)")
+_E2E = _REG.histogram(
+    "repro_request_e2e_seconds", "submit -> request retirement (by mode)")
+_STEP_WALL = _REG.histogram(
+    "repro_token_step_seconds",
+    "host wall per token-granular decode step (dispatch + host bookkeeping)",
+    buckets=obs.LATENCY_BUCKETS)
+_TOKENS_PER_S = _REG.gauge(
+    "repro_decode_tokens_per_second",
+    "real (non-pad, non-filler) tokens per wall second over the last drain")
+_POST_WARMUP_RETRACES = _REG.gauge(
+    "repro_decode_retraces_post_warmup",
+    "token_step program installs after the first decode step of a drain — "
+    "the live zero-recompile invariant (asserted 0; splices and policy "
+    "updates must never retrace)")
 
 
 @dataclasses.dataclass
@@ -128,7 +167,27 @@ class ContinuousBatcher:
         self._order: Dict[int, int] = {}     # rid -> arrival index (FIFO across buckets)
         self.stats = dict(waves=0, requests=0, real_tokens=0, padded_tokens=0,
                           filler_tokens=0, backfilled=0, splices=0,
-                          decode_steps=0)
+                          decode_steps=0, decode_retraces_post_warmup=0)
+        self.mode = "token" if self.bcfg.token_granular else "wave"
+        self._submit_t: Dict[int, float] = {}    # rid -> submit perf_counter
+        # per-request latency log (rid, bucket, prompt_len, max_new, ttft,
+        # e2e seconds) — the source benchmarks/serving_table.py reduces to
+        # TTFT/e2e p50/p99 per mode
+        self.request_log: List[dict] = []
+
+    def _update_queue_gauges(self) -> None:
+        for b, q in self.queues.items():
+            _QUEUE_DEPTH.set(len(q), bucket=str(b))
+
+    def _record_latency(self, req: "Request", ttft: Optional[float],
+                        e2e: float, observe_ttft: bool = True) -> None:
+        if ttft is not None and observe_ttft:
+            _TTFT.observe(ttft, mode=self.mode)
+        _E2E.observe(e2e, mode=self.mode)
+        self.request_log.append(dict(
+            rid=req.rid, bucket=self.bucket_of(len(req.tokens)),
+            prompt_len=len(req.tokens), max_new=req.max_new,
+            ttft=ttft, e2e=e2e))
 
     # -- admission -----------------------------------------------------
     def bucket_of(self, prompt_len: int) -> int:
@@ -149,6 +208,10 @@ class ContinuousBatcher:
         self.queues[self.bucket_of(len(req.tokens))].append(req)
         self._order[req.rid] = self._arrival
         self._arrival += 1
+        self._submit_t[req.rid] = time.perf_counter()
+        obs.async_begin("request", req.rid, prompt_len=len(req.tokens),
+                        max_new=req.max_new)
+        self._update_queue_gauges()
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
@@ -235,10 +298,14 @@ class ContinuousBatcher:
         padmask_kw = (dict(prompt_lens=lens, slot_new_tokens=budgets,
                            max_cache_len=self.max_cache_len())
                       if self.padmask else {})
-        out = np.asarray(generate(
-            self.params, {"tokens": jnp.asarray(batch)}, self.cfg, scfg,
-            par=self.par, adaptive=self.adaptive, mesh=self.mesh,
-            **padmask_kw))
+        self._update_queue_gauges()
+        with obs.span("wave", cat="scheduler", wave=self.wave, bucket=bucket,
+                      admitted=len(admitted), backfilled=n_backfilled):
+            out = np.asarray(generate(
+                self.params, {"tokens": jnp.asarray(batch)}, self.cfg, scfg,
+                par=self.par, adaptive=self.adaptive, mesh=self.mesh,
+                **padmask_kw))
+        t_done = time.perf_counter()
 
         done = []
         for i, req in enumerate(admitted):
@@ -247,11 +314,17 @@ class ContinuousBatcher:
             self.stats["real_tokens"] += int(req.max_new)
             self.stats["padded_tokens"] += int(
                 bucket - len(req.tokens) + bc.new_token_bucket - req.max_new)
+            e2e = t_done - self._submit_t.pop(req.rid, t_done)
+            self._record_latency(req, e2e, e2e)   # wave TTFT == e2e (fused)
+            obs.async_end("request", req.rid, wave=self.wave)
         self.stats["backfilled"] += n_backfilled
         self.stats["filler_tokens"] += filler * (bucket + bc.new_token_bucket)
         self.stats["requests"] += len(admitted)
         self.stats["waves"] += 1
         self.stats["decode_steps"] += bc.new_token_bucket - 1
+        _ADMISSIONS.inc(len(admitted), mode=self.mode)
+        _BACKFILLS.inc(n_backfilled)
+        _OCCUPANCY.set(self.occupancy(), mode=self.mode)
         self.wave += 1
         return done
 
@@ -270,18 +343,27 @@ class ContinuousBatcher:
         L = len(req.tokens)
         bucket = self.bucket_of(L)
         padded = self._pad(req.tokens, bucket)
-        first, fresh = prefill_one(
-            self.params, padded[None], L, self.cfg, self.par,
-            max_cache_len=self.max_cache_len(),
-            temperature=self.bcfg.temperature, key=key)
-        cache = splice_slot_jit(cache, fresh, slot)
-        first = int(np.asarray(first)[0])
-        state[slot] = dict(req=req, remaining=req.max_new - 1, toks=[first])
+        with obs.span("admit", cat="scheduler", rid=req.rid, slot=slot,
+                      bucket=bucket):
+            first, fresh = prefill_one(
+                self.params, padded[None], L, self.cfg, self.par,
+                max_cache_len=self.max_cache_len(),
+                temperature=self.bcfg.temperature, key=key)
+            cache = splice_slot_jit(cache, fresh, slot)
+            first = int(np.asarray(first)[0])   # sync: first token on host
+        obs.instant("splice", cat="scheduler", rid=req.rid, slot=slot)
+        ttft = time.perf_counter() - self._submit_t.get(
+            req.rid, time.perf_counter())
+        _TTFT.observe(ttft, mode=self.mode)
+        state[slot] = dict(req=req, remaining=req.max_new - 1, toks=[first],
+                           ttft=ttft)
         pos[slot] = L
         tok[slot] = first
         self.stats["requests"] += 1
         self.stats["real_tokens"] += 1
         self.stats["padded_tokens"] += bucket - L
+        _ADMISSIONS.inc(1, mode=self.mode)
+        self._update_queue_gauges()
         done = []
         if state[slot]["remaining"] == 0:    # max_new == 1: retire in place
             done = self._retire(slot, state)
@@ -291,6 +373,12 @@ class ContinuousBatcher:
         st = state[slot]
         state[slot] = None
         req = st["req"]
+        e2e = time.perf_counter() - self._submit_t.pop(
+            req.rid, time.perf_counter())
+        # TTFT was already observed at the admission splice
+        self._record_latency(req, st.get("ttft"), e2e, observe_ttft=False)
+        obs.instant("retire", cat="scheduler", rid=req.rid, slot=slot)
+        obs.async_end("request", req.rid, step=self.stats["decode_steps"])
         return [Completion(req.rid, np.asarray(st["toks"], np.int32),
                            self.stats["decode_steps"], len(req.tokens),
                            self.bucket_of(len(req.tokens)))]
@@ -311,18 +399,33 @@ class ContinuousBatcher:
         k_obs = max(1, int(bc.observe_every))
         pending = None
 
+        t_drain = time.perf_counter()
+        tokens_at_start = self.stats["real_tokens"]
         for s in range(B):                   # initial admission
             cache, d = self._admit_into(s, state, pos, tok, cache, key)
             done.extend(d)
+        # zero-recompile invariant: the step program compiles once on the
+        # first decode step of a cold process; everything after — splices,
+        # retirements, policy adoptions — must reuse it.  Snapshot the
+        # token_step install count after step 0 and assert no further
+        # installs land during the drain (the live gauge CI gates).
+        warmup_installs = None
         while any(st is not None for st in state):
             active_np = np.asarray([st is not None for st in state])
             key, sub = jax.random.split(key)
             gate = (self.stats["decode_steps"] % k_obs == 0)
-            out = token_step(
-                self.params, cache, jnp.asarray(tok), sub,
-                jnp.asarray(pos), jnp.asarray(active_np), self.cfg, self.par,
-                temperature=bc.temperature, adaptive=self.adaptive,
-                mesh=self.mesh, gate=gate)
+            t_step = time.perf_counter()
+            with obs.span("token_step", cat="scheduler",
+                          step=self.stats["decode_steps"],
+                          active=int(active_np.sum())):
+                out = token_step(
+                    self.params, cache, jnp.asarray(tok), sub,
+                    jnp.asarray(pos), jnp.asarray(active_np), self.cfg,
+                    self.par, temperature=bc.temperature,
+                    adaptive=self.adaptive, mesh=self.mesh, gate=gate)
+            _STEP_WALL.observe(time.perf_counter() - t_step)
+            if warmup_installs is None:
+                warmup_installs = obs.retrace_total("token_step")
             if self.adaptive is not None:
                 tok_d, cache, telem = out
                 if pending is not None:      # one-step-stale observe keeps
@@ -350,8 +453,22 @@ class ContinuousBatcher:
                     done.extend(d)
                     if state[s] is not None:
                         self.stats["splices"] += 1
+                        _SPLICES.inc(1)
         if pending is not None and self.adaptive is not None:
             self.adaptive.observe(jax.device_get(pending))
+        post = (0 if warmup_installs is None
+                else int(obs.retrace_total("token_step") - warmup_installs))
+        self.stats["decode_retraces_post_warmup"] = post
+        _POST_WARMUP_RETRACES.set(post)
+        assert post == 0, (
+            f"token-granular drain retraced the step program {post}x after "
+            f"warmup — splices/policy updates must only change traced values")
+        _OCCUPANCY.set(self.occupancy(), mode=self.mode)
+        wall = time.perf_counter() - t_drain
+        if wall > 0:
+            _TOKENS_PER_S.set(
+                (self.stats["real_tokens"] - tokens_at_start) / wall,
+                mode=self.mode)
         return done
 
     def run(self) -> List[Completion]:
@@ -369,11 +486,30 @@ class ContinuousBatcher:
         total = useful + s["padded_tokens"] + s["filler_tokens"]
         return useful / total if total else 1.0
 
+    def latency_summary(self) -> dict:
+        """TTFT / e2e percentiles (seconds) over ``request_log`` — exact
+        order statistics from the per-request records, not bucket-resolution
+        histogram reads.  Empty log -> empty dict."""
+        if not self.request_log:
+            return {}
+        e2e = np.asarray([r["e2e"] for r in self.request_log])
+        ttft = np.asarray([r["ttft"] for r in self.request_log
+                           if r["ttft"] is not None])
+        out = dict(requests=len(self.request_log),
+                   e2e_p50=float(np.percentile(e2e, 50)),
+                   e2e_p99=float(np.percentile(e2e, 99)))
+        if ttft.size:
+            out.update(ttft_p50=float(np.percentile(ttft, 50)),
+                       ttft_p99=float(np.percentile(ttft, 99)))
+        return out
+
     def describe(self) -> str:
         s = self.stats
-        mode = "token" if self.bcfg.token_granular else "wave"
-        return (f"batcher[{mode}] waves={s['waves']} steps={s['decode_steps']} "
+        return (f"batcher[{self.mode}] waves={s['waves']} "
+                f"steps={s['decode_steps']} "
                 f"requests={s['requests']} splices={s['splices']} "
-                f"backfilled={s['backfilled']} slot_util={self.occupancy():.2f} "
+                f"backfilled={s['backfilled']} "
+                f"retraces={s['decode_retraces_post_warmup']} "
+                f"slot_util={self.occupancy():.2f} "
                 f"(real={s['real_tokens']} padded={s['padded_tokens']} "
                 f"filler={s['filler_tokens']})")

@@ -29,13 +29,35 @@ import os
 import re
 from typing import List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.runtime.policy import SwapPolicy
 
 __all__ = ["PolicyStore", "PolicyReader"]
 
 _CURRENT = "CURRENT"
+_HEARTBEAT = "HEARTBEAT"
 _FMT = "policy_v{:06d}.json"
 _RX = re.compile(r"^policy_v(\d{6})\.json$")
+
+# host-side observability (repro.obs).  The published-version gauge plus the
+# per-replica staleness gauge together disambiguate the two zero-lag cases:
+# published == 0 means nothing was ever published (staleness 0 is vacuous);
+# published > 0 with staleness k > 0 means that replica is k versions behind.
+_REG = obs.default_registry()
+_PUBLISHED = _REG.gauge(
+    "repro_policy_store_published",
+    "current PolicyStore version (0 = nothing published yet)")
+_PUBLISHES = _REG.counter(
+    "repro_policy_publishes_total", "policies published by this process")
+_STALENESS = _REG.gauge(
+    "repro_replica_staleness",
+    "store versions this replica's adopted policy is behind CURRENT")
+_ADOPTIONS = _REG.counter(
+    "repro_policy_adoptions_total",
+    "newer store policies adopted by this replica's poll()")
+_POLL_FAST = _REG.counter(
+    "repro_policy_poll_total",
+    "PolicyReader.poll calls by path (heartbeat fast-path vs full read)")
 
 
 class PolicyStore:
@@ -114,12 +136,41 @@ class PolicyStore:
         with open(tmp, "w") as f:
             f.write(policy.to_json())
         os.replace(tmp, path)
+        # heartbeat BEFORE the CURRENT swap: a crash between the two leaves
+        # hb > CURRENT, which readers treat as "never cache, take the full
+        # path" — degraded to pre-heartbeat polling, never a missed publish
+        # (the reverse order could hide a committed version from fast-path
+        # readers forever)
+        self._touch_heartbeat(version)
         cur_tmp = os.path.join(self.root, _CURRENT + ".tmp")
         with open(cur_tmp, "w") as f:
             f.write(str(version))
         os.replace(cur_tmp, os.path.join(self.root, _CURRENT))
         self._last_published = version
+        _PUBLISHED.set(version)
+        _PUBLISHES.inc(1)
         return version
+
+    def _touch_heartbeat(self, version: int) -> None:
+        """Touch ``HEARTBEAT`` with ``mtime_ns == version``: readers
+        fast-path their poll on one ``stat()`` of this file.  Setting the
+        mtime to the version (instead of wall time) makes the signal
+        strictly monotonic and immune to filesystem mtime granularity —
+        two publishes inside one clock quantum still produce two distinct
+        heartbeat values."""
+        path = os.path.join(self.root, _HEARTBEAT)
+        if not os.path.exists(path):
+            with open(path, "w"):
+                pass
+        os.utime(path, ns=(version, version))
+
+    def heartbeat_ns(self) -> Optional[int]:
+        """``HEARTBEAT`` mtime_ns (== last published version), or None when
+        the store predates heartbeats / has never published."""
+        try:
+            return os.stat(os.path.join(self.root, _HEARTBEAT)).st_mtime_ns
+        except FileNotFoundError:
+            return None
 
     def prune(self, keep_last: int = 8) -> List[int]:
         """Drop all but the newest ``keep_last`` versions (never the current
@@ -150,26 +201,55 @@ class PolicyReader:
     replica)."""
 
     def __init__(self, store: PolicyStore, targets: Sequence[str],
-                 tile_rows: int = 0):
+                 tile_rows: int = 0, name: str = "replica"):
         self.store = store
         self.targets = tuple(targets)
         self.tile_rows = int(tile_rows)
+        self.name = name
         self.version: int = -1
         self.policy: Optional[SwapPolicy] = None
         self._dyn_cache = None
+        self._hb_seen: Optional[int] = None    # heartbeat ns at last full poll
         self.poll()
 
     def poll(self) -> bool:
-        """Adopt the store's current policy if newer; True when it changed."""
+        """Adopt the store's current policy if newer; True when it changed.
+
+        Fast path: the writer touches ``HEARTBEAT`` with ``mtime_ns ==
+        version`` on every publish, so an unchanged heartbeat proves no
+        publish happened since the last full poll and the whole check is one
+        ``stat()`` — no ``CURRENT`` read, no JSON load.  Stores without a
+        heartbeat (pre-heartbeat layouts, manual edits) always take the full
+        path."""
+        hb = self.store.heartbeat_ns()
+        if hb is not None and hb == self._hb_seen:
+            _POLL_FAST.inc(1, path="heartbeat")
+            self._set_staleness(0 if self.version >= hb else None)
+            return False
+        _POLL_FAST.inc(1, path="full")
         v = self.store.current_version()
+        # cache the heartbeat only once CURRENT caught up to it: hb >
+        # CURRENT happens in the instant (or crash window) between the
+        # writer's heartbeat touch and pointer swap, and caching there
+        # would fast-path right past the commit
+        caught_up = hb is not None and v is not None and v >= hb
         if v is None or v == self.version:
+            self._hb_seen = hb if caught_up else None
+            self._set_staleness(None)
             return False
         got = self.store.load_current()
         if got is None:
             return False
         self.version, self.policy = got
         self._dyn_cache = None
+        self._hb_seen = hb if caught_up else None
+        _ADOPTIONS.inc(1, replica=self.name)
+        self._set_staleness(None)
         return True
+
+    def _set_staleness(self, known: Optional[int]) -> None:
+        _STALENESS.set(self.staleness() if known is None else known,
+                       replica=self.name)
 
     def staleness(self) -> int:
         """Store versions this replica is behind ``CURRENT`` (0 = serving

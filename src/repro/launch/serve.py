@@ -32,21 +32,84 @@ FIFO request *mid-flight* — its prompt is pad-mask prefilled into the
 slot's cache region and spliced into the running batch at the next step
 boundary (zero recompiles; per-request tokens bit-identical to the
 wave-granular oracle under greedy decoding).
+
+Observability (``repro.obs``, see docs/observability.md): ``--metrics-port``
+serves live Prometheus ``/metrics`` (``--metrics-hold`` keeps it up after
+the run), ``--obs-dir`` writes a Chrome-trace timeline + metric snapshots
+at exit, ``--device-trace`` adds a jax.profiler device trace; any of them
+also turns on XLA-compile accounting via ``jax.monitoring``.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHS, reduced
 from repro.configs.base import AxPolicy
 from repro.models import init_params
 from repro.serve import ServeConfig, generate
+
+
+@contextlib.contextmanager
+def _observability(args):
+    """Driver-level observability setup (all opt-in, see docs/observability.md):
+
+    * ``--metrics-port P`` — serve ``/metrics`` (Prometheus text) from a
+      stdlib http.server thread for the whole run; ``--metrics-hold S``
+      keeps the process alive S extra seconds after serving finishes so an
+      external scraper can land at least one scrape.
+    * ``--obs-dir DIR`` — install a trace recorder and, at exit, write
+      ``DIR/trace.json`` (Chrome trace: load in chrome://tracing/Perfetto),
+      ``DIR/metrics.prom`` (final Prometheus snapshot) and one JSON line in
+      ``DIR/metrics.jsonl``.
+    * ``--device-trace DIR`` — additionally wrap the run in a
+      ``jax.profiler`` device trace (heavyweight XLA/TensorBoard dump).
+
+    Any of these also installs the ``jax.monitoring`` compile listener, so
+    ``repro_jax_compiles_total`` counts every XLA backend compile."""
+    enabled = args.metrics_port is not None or args.obs_dir or args.device_trace
+    if not enabled:
+        yield
+        return
+    obs.install_jax_compile_listener()
+    server = (obs.start_metrics_server(args.metrics_port)
+              if args.metrics_port is not None else None)
+    if server is not None:
+        print(f"[obs] serving /metrics on port {server.port}")
+    rec = None
+    if args.obs_dir:
+        os.makedirs(args.obs_dir, exist_ok=True)
+        rec = obs.TraceRecorder()
+        obs.install_recorder(rec)
+    dev = (obs.device_trace(args.device_trace) if args.device_trace
+           else contextlib.nullcontext())
+    try:
+        with dev:
+            yield
+    finally:
+        if args.obs_dir:
+            obs.install_recorder(None)
+            rec.save(os.path.join(args.obs_dir, "trace.json"))
+            with open(os.path.join(args.obs_dir, "metrics.prom"), "w") as f:
+                f.write(obs.prometheus_text())
+            obs.write_snapshot(os.path.join(args.obs_dir, "metrics.jsonl"),
+                               run=" ".join(
+                                   f"{k}={v}" for k, v in sorted(
+                                       vars(args).items()) if v))
+            print(f"[obs] trace + metrics snapshots written to {args.obs_dir}")
+        if server is not None:
+            if args.metrics_hold > 0:
+                print(f"[obs] holding /metrics open {args.metrics_hold}s")
+                time.sleep(args.metrics_hold)
+            server.close()
 
 
 def _drift_hook(at_step: int, scale: float):
@@ -114,8 +177,9 @@ def _run_fleet(args, cfg):
     # one logical PolicyReader per replica: they adopt the policy current at
     # spin-up and then surface the staleness metric (versions behind
     # CURRENT) until their next poll — the fleet lag monitor
-    readers = [PolicyReader(store, cfg.ax.targets, tile_rows=args.tile_rows)
-               for _ in range(n)]
+    readers = [PolicyReader(store, cfg.ax.targets, tile_rows=args.tile_rows,
+                            name=f"r{i}")
+               for i in range(n)]
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         L = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
@@ -177,6 +241,18 @@ def main():
                     help="--fleet synthetic request count")
     ap.add_argument("--policy-store", default="/tmp/repro_policy_store",
                     help="--fleet PolicyStore root directory")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="P",
+                    help="serve Prometheus /metrics on this port for the "
+                         "whole run (0 = ephemeral, printed at startup)")
+    ap.add_argument("--metrics-hold", type=float, default=0.0, metavar="S",
+                    help="keep /metrics up S seconds after serving finishes "
+                         "(lets an external scraper land a scrape)")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="write Chrome trace + Prometheus/JSONL metric "
+                         "snapshots here at exit")
+    ap.add_argument("--device-trace", default=None, metavar="DIR",
+                    help="wrap the run in a jax.profiler device trace "
+                         "(XLA/TensorBoard dump under DIR; heavyweight)")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
@@ -185,10 +261,14 @@ def main():
     if args.ax or args.adaptive or args.fleet:
         cfg = dataclasses.replace(cfg, ax=AxPolicy(backend="mxu"))
 
-    if args.fleet:
-        _run_fleet(args, cfg)
-        return
+    with _observability(args):
+        if args.fleet:
+            _run_fleet(args, cfg)
+        else:
+            _run_single(args, cfg)
 
+
+def _run_single(args, cfg):
     controller = None
     param_hook = None
     if args.adaptive:

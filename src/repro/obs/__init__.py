@@ -1,0 +1,115 @@
+"""Unified observability layer (DESIGN: registry -> spans -> audit -> gates).
+
+One measurement substrate for the whole runtime (ISSUE 6):
+
+  metrics — counter/gauge/histogram registry with label sets; the
+            process-wide :func:`default_registry` every subsystem reports
+            into, exported as Prometheus text + JSONL snapshots (export)
+  trace   — Chrome-trace-format span API (admission -> prefill -> splice ->
+            decode -> retire on one timeline) + opt-in jax.profiler hook
+  export  — Prometheus exposition over a stdlib http.server thread
+            (``launch/serve --metrics-port``) and JSONL snapshot diffs
+  audit   — append-only retune event log next to the PolicyStore (trigger,
+            drift score, winning triple / tile-grid digest, predicted gain,
+            store version): policy history is replayable after the fact
+
+plus **recompile accounting as a first-class metric**: every compiled-
+program install in the serving engine (``_ADAPTIVE_FNS`` / ``_TOKEN_FNS`` /
+the fused + prefill lru caches) counts into ``repro_retraces_total{kind=}``,
+and :func:`install_jax_compile_listener` additionally counts XLA backend
+compiles via ``jax.monitoring`` — so "zero recompiles across splices and
+policy updates" is a live gauge the token-granular batcher asserts on and
+CI gates (``serving.zero_recompiles``), instead of a per-test re-derivation.
+
+Everything in this package is host-side and dependency-free within
+``repro`` (it imports nothing from the runtime), so instrumentation can
+never perturb a traced computation — the bit-identity guarantees are
+regression-tested with the instrumentation live.
+
+Metric name catalogue: see docs/observability.md.
+"""
+from __future__ import annotations
+
+from . import audit, export, metrics, trace
+from .audit import AUDIT_FILENAME, AuditLog, audit_for_store, grid_digest
+from .export import (MetricsServer, prometheus_text, registry_snapshot,
+                     start_metrics_server, write_snapshot)
+from .metrics import (LATENCY_BUCKETS, Counter, Gauge, Histogram,
+                      MetricsRegistry, default_registry,
+                      reset_default_registry)
+from .trace import (TraceRecorder, async_begin, async_end, current_recorder,
+                    device_trace, install_recorder, instant, span)
+
+__all__ = [
+    "audit", "export", "metrics", "trace",
+    "AUDIT_FILENAME", "AuditLog", "audit_for_store", "grid_digest",
+    "MetricsServer", "prometheus_text", "registry_snapshot",
+    "start_metrics_server", "write_snapshot",
+    "LATENCY_BUCKETS", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "reset_default_registry",
+    "TraceRecorder", "async_begin", "async_end", "current_recorder",
+    "device_trace", "install_recorder", "instant", "span",
+    "RETRACES", "JAX_COMPILES", "count_retrace", "retrace_total",
+    "install_jax_compile_listener",
+]
+
+
+# ---------------------------------------------------------------------------
+# recompile accounting
+# ---------------------------------------------------------------------------
+
+# one series per program-cache kind: "token_step" (the token-granular
+# per-step program), "fused_adaptive" (the telemetry-carrying scan),
+# "fused" (the plain decode scan), "prefill" (per-bucket pad-mask prefill).
+# A retrace == a cache-miss install of a compiled program; traced-value
+# changes (policy updates, splices, new waves) never count.
+RETRACES = default_registry().counter(
+    "repro_retraces_total",
+    "compiled-program installs in the serving engine by program kind "
+    "(policy updates and splices change traced values only and never count)")
+
+# XLA backend compiles observed via jax.monitoring (opt-in listener):
+# includes everything jit-compiled in-process, e.g. the controller's
+# re-tune scorers — a superset of the engine's program installs.
+JAX_COMPILES = default_registry().counter(
+    "repro_jax_compiles_total",
+    "XLA backend compiles observed via jax.monitoring (install the "
+    "listener with obs.install_jax_compile_listener)")
+
+
+def count_retrace(kind: str) -> None:
+    """Record one compiled-program install of ``kind``."""
+    RETRACES.inc(1, kind=kind)
+
+
+def retrace_total(kind: str = None) -> float:
+    """Current retrace count — one kind, or the process-wide total."""
+    if kind is None:
+        return RETRACES.total()
+    return RETRACES.value(kind=kind)
+
+
+_JAX_LISTENER_INSTALLED = False
+
+# jax.monitoring duration-event names that mark one backend compile
+# (jax >= 0.4: '/jax/core/compile/backend_compile_duration')
+_COMPILE_EVENT_PREFIX = "/jax/core/compile/backend_compile"
+
+
+def install_jax_compile_listener() -> bool:
+    """Register a ``jax.monitoring`` listener counting XLA backend compiles
+    into ``repro_jax_compiles_total`` (idempotent; listeners cannot be
+    unregistered, so this is opt-in — ``launch/serve`` installs it whenever
+    any observability flag is set).  Returns True when newly installed."""
+    global _JAX_LISTENER_INSTALLED
+    if _JAX_LISTENER_INSTALLED:
+        return False
+    import jax.monitoring
+
+    def _on_duration(name: str, duration: float, **kw) -> None:
+        if name.startswith(_COMPILE_EVENT_PREFIX):
+            JAX_COMPILES.inc(1)
+
+    jax.monitoring.register_event_duration_secs_listener(_on_duration)
+    _JAX_LISTENER_INSTALLED = True
+    return True

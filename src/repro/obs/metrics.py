@@ -1,0 +1,272 @@
+"""Metrics registry: counters, gauges and histograms with label sets.
+
+The unified observability substrate every subsystem reports into (ISSUE 6 /
+ROADMAP tentpole 1's measurement half): the serving engine counts program
+retraces, the continuous batcher observes TTFT / end-to-end latency
+histograms and occupancy gauges, the drift detector exports per-target
+drift scores, and the policy store exports its published version and each
+replica's adoption lag.  Everything here is **host-side only** — a metric
+update is a dict write under a lock, never a traced op — so instrumenting a
+path cannot perturb compiled programs, tokens, or telemetry (the PR-5
+bit-identity and zero-recompile guarantees are regression-tested with the
+instrumentation live).
+
+Design (deliberately prometheus-client-shaped, stdlib-only):
+
+* a :class:`MetricsRegistry` owns named metrics; :func:`default_registry`
+  is the process-wide instance the instrumented subsystems use.  Metric
+  creation is get-or-create — two modules may declare the same metric —
+  but re-declaring with a different type or help string raises.
+* every metric holds a family of **series** keyed by its label set
+  (``counter.inc(1, mode="wave")``); label order never matters.
+* :class:`Histogram` uses explicit cumulative ``le`` bucket edges (values
+  land in every bucket whose edge is >= the value, Prometheus semantics)
+  plus ``sum``/``count``, and exposes :meth:`Histogram.percentile` so hosts
+  can read p50/p99 straight off the bucket counts.
+
+Exposition lives in :mod:`repro.obs.export` (Prometheus text format over a
+stdlib HTTP thread + JSONL snapshots for offline diffing).
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "LATENCY_BUCKETS",
+    "default_registry",
+    "reset_default_registry",
+]
+
+# default Histogram edges: serving latencies from 50us (a cached token step)
+# to 2 minutes (a cold-compile wave), roughly log-spaced
+LATENCY_BUCKETS = (
+    0.00005, 0.0002, 0.001, 0.005, 0.02, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0, 120.0,
+)
+
+_INF = float("inf")
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, str]) -> LabelKey:
+    """Canonical (sorted) label tuple — label order never matters."""
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class _Metric:
+    """Shared label-series bookkeeping for the three metric types."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str):
+        self.name = name
+        self.help = help
+        self._series: Dict[LabelKey, object] = {}
+        self._lock = threading.Lock()
+
+    def _zero(self):
+        raise NotImplementedError
+
+    def _get(self, labels: Dict[str, str]):
+        key = _label_key(labels)
+        with self._lock:
+            if key not in self._series:
+                self._series[key] = self._zero()
+            return key
+
+    def series(self) -> Dict[LabelKey, object]:
+        """Snapshot of {label-key: value} for every series."""
+        with self._lock:
+            return dict(self._series)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._series.clear()
+
+
+class Counter(_Metric):
+    """Monotonically increasing count (e.g. retraces, splices, retunes)."""
+
+    kind = "counter"
+
+    def _zero(self):
+        return 0.0
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        assert amount >= 0, f"counter {self.name}: negative inc {amount}"
+        key = self._get(labels)
+        with self._lock:
+            self._series[key] += amount
+
+    def value(self, **labels) -> float:
+        return float(self._series.get(_label_key(labels), 0.0))
+
+    def total(self) -> float:
+        """Sum over every label set (the process-wide count)."""
+        with self._lock:
+            return float(sum(self._series.values()))
+
+
+class Gauge(_Metric):
+    """Point-in-time value (occupancy, queue depth, drift score, lag)."""
+
+    kind = "gauge"
+
+    def _zero(self):
+        return 0.0
+
+    def set(self, value: float, **labels) -> None:
+        key = self._get(labels)
+        with self._lock:
+            self._series[key] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        key = self._get(labels)
+        with self._lock:
+            self._series[key] += amount
+
+    def value(self, **labels) -> float:
+        return float(self._series.get(_label_key(labels), 0.0))
+
+
+class _HistSeries:
+    __slots__ = ("counts", "sum", "count")
+
+    def __init__(self, n_buckets: int):
+        self.counts = [0] * (n_buckets + 1)   # trailing +Inf bucket
+        self.sum = 0.0
+        self.count = 0
+
+
+class Histogram(_Metric):
+    """Cumulative-bucket histogram with explicit ``le`` edges.
+
+    ``observe(v)`` increments the first bucket whose edge satisfies
+    ``v <= le`` plus every bucket after it at exposition time (Prometheus
+    cumulative semantics; internally counts are per-bucket and cumulated on
+    read, so ``observe`` stays O(log buckets))."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str,
+                 buckets: Sequence[float] = LATENCY_BUCKETS):
+        super().__init__(name, help)
+        edges = tuple(sorted(float(b) for b in buckets))
+        assert edges and all(
+            b < a for b, a in zip(edges, edges[1:]) or [(0, 1)]
+        ) or len(set(edges)) == len(edges), f"duplicate bucket edges {edges}"
+        self.buckets = edges
+
+    def _zero(self):
+        return _HistSeries(len(self.buckets))
+
+    def observe(self, value: float, **labels) -> None:
+        key = self._get(labels)
+        idx = bisect.bisect_left(self.buckets, float(value))
+        with self._lock:
+            s: _HistSeries = self._series[key]
+            s.counts[idx] += 1          # idx == len(buckets) -> +Inf bucket
+            s.sum += float(value)
+            s.count += 1
+
+    def cumulative(self, **labels) -> List[Tuple[float, int]]:
+        """[(le_edge, cumulative_count), ..., (inf, total)] for one series."""
+        s = self._series.get(_label_key(labels))
+        if s is None:
+            return [(b, 0) for b in self.buckets] + [(_INF, 0)]
+        out, acc = [], 0
+        for edge, c in zip(list(self.buckets) + [_INF], s.counts):
+            acc += c
+            out.append((edge, acc))
+        return out
+
+    def snapshot(self, **labels) -> dict:
+        s = self._series.get(_label_key(labels))
+        if s is None:
+            return dict(sum=0.0, count=0,
+                        buckets=self.cumulative(**labels))
+        return dict(sum=s.sum, count=s.count, buckets=self.cumulative(**labels))
+
+    def percentile(self, q: float, **labels) -> Optional[float]:
+        """Bucket-resolution quantile (q in [0, 1]): the smallest bucket edge
+        whose cumulative count covers q of the observations (None when the
+        series is empty; +Inf-bucket hits report the largest finite edge)."""
+        cum = self.cumulative(**labels)
+        total = cum[-1][1]
+        if total == 0:
+            return None
+        need = q * total
+        for edge, acc in cum:
+            if acc >= need:
+                return edge if edge != _INF else self.buckets[-1]
+        return self.buckets[-1]
+
+
+class MetricsRegistry:
+    """Named metric collection with get-or-create declaration semantics."""
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+        self._lock = threading.Lock()
+
+    def _declare(self, cls, name: str, help: str, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is not None:
+                assert isinstance(m, cls), (
+                    f"metric {name!r} already declared as {m.kind}, "
+                    f"not {cls.kind}")
+                assert m.help == help, (
+                    f"metric {name!r} re-declared with different help: "
+                    f"{m.help!r} vs {help!r}")
+                if kw.get("buckets") is not None:
+                    assert tuple(sorted(map(float, kw["buckets"]))) == m.buckets, (
+                        f"histogram {name!r} re-declared with different buckets")
+                return m
+            m = cls(name, help, **kw)
+            self._metrics[name] = m
+            return m
+
+    def counter(self, name: str, help: str) -> Counter:
+        return self._declare(Counter, name, help)
+
+    def gauge(self, name: str, help: str) -> Gauge:
+        return self._declare(Gauge, name, help)
+
+    def histogram(self, name: str, help: str,
+                  buckets: Sequence[float] = LATENCY_BUCKETS) -> Histogram:
+        return self._declare(Histogram, name, help, buckets=buckets)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        return self._metrics.get(name)
+
+    def metrics(self) -> Iterable[_Metric]:
+        with self._lock:
+            return [self._metrics[k] for k in sorted(self._metrics)]
+
+    def clear_values(self) -> None:
+        """Reset every series (metric declarations stay) — test isolation."""
+        for m in self.metrics():
+            m.clear()
+
+
+_DEFAULT = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide registry the instrumented subsystems report into."""
+    return _DEFAULT
+
+
+def reset_default_registry() -> None:
+    """Zero every series in the default registry (declarations persist, so
+    module-level metric handles stay valid) — used by tests to isolate
+    counter deltas."""
+    _DEFAULT.clear_values()

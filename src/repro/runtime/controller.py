@@ -15,12 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import multipliers as M
 from repro.core.metrics import abs_err
 from repro.core.swapper import SwapConfig, all_configs, apply_swapper_dyn
@@ -32,6 +34,22 @@ from .telemetry import (Telemetry, base_target, is_tile_key, operand_summary,
 
 __all__ = ["AdaptiveConfig", "RetuneEvent", "TileRetuneEvent",
            "AdaptiveController", "all_triples", "tile_triples"]
+
+# host-side observability (repro.obs): re-tune counters/latency/gain plus
+# the append-only audit trail next to the PolicyStore (obs.audit) — every
+# policy mutation is a structured event carrying its published store
+# version, so the policy history is replayable after the fact.
+_REG = obs.default_registry()
+_RETUNES = _REG.counter(
+    "repro_retunes_total",
+    "controller re-tunes by kind (scalar target vs per-row-tile grid)")
+_RETUNE_WALL = _REG.histogram(
+    "repro_retune_seconds",
+    "host wall of one re-tune (vmapped sweep scoring + policy publish)")
+_RETUNE_GAIN = _REG.gauge(
+    "repro_retune_predicted_gain",
+    "per-target predicted error reduction of the last re-tune "
+    "(incumbent score - winner score, re-tune metric units)")
 
 
 def all_triples(bits: int) -> np.ndarray:
@@ -219,6 +237,9 @@ class AdaptiveController:
         self.retunes: List[RetuneEvent] = []
         self.log: List[str] = []
         self._log_fn = log_fn
+        # audit trail rides next to the store (obs.audit): store-less
+        # controllers (unit tests, single-host experiments) skip it
+        self.audit = obs.audit_for_store(store) if store is not None else None
 
     @property
     def tile_rows(self) -> int:
@@ -363,27 +384,42 @@ class AdaptiveController:
     def retune(self, target: str, drift: float = 0.0) -> RetuneEvent:
         """Incremental re-tune of one target over its live operand buffer:
         one vmapped call scores NoSwap + all 4M configs; zero recompiles."""
-        a, b = self.buffers[target].operands()
-        scores = np.asarray(_score_configs(
-            self.mult, jnp.asarray(a), jnp.asarray(b), self.triples,
-            self.cfg.metric))
-        best = int(np.argmin(scores))
-        old = self.policy.lookup(target)
-        old_idx = int(np.nonzero(
-            (np.asarray(self.triples) == np.asarray(triple_of(old))).all(1))[0][0])
-        new = None if best == 0 else all_configs(self.mult.bits)[best - 1]
-        self.policy.set_config(target, new)
-        snap = self.telemetry.snapshot().get(target)
-        if snap is not None and snap.get("bit_probs") is not None:
-            self.detector.rebase(target, snap["bit_probs"])
-        self._last_retune_step = self.step
-        ev = RetuneEvent(self.step, target, drift, old, new,
-                         float(scores[old_idx]), float(scores[best]))
-        self.retunes.append(ev)
-        self._emit(ev.describe())
-        if self.store is not None:
-            v = self.store.publish(self.policy)
-            self._emit(f"published policy v{v}")
+        t0 = time.perf_counter()
+        with obs.span("retune", cat="adapt", target=target, drift=drift):
+            a, b = self.buffers[target].operands()
+            scores = np.asarray(_score_configs(
+                self.mult, jnp.asarray(a), jnp.asarray(b), self.triples,
+                self.cfg.metric))
+            best = int(np.argmin(scores))
+            old = self.policy.lookup(target)
+            old_idx = int(np.nonzero(
+                (np.asarray(self.triples)
+                 == np.asarray(triple_of(old))).all(1))[0][0])
+            new = None if best == 0 else all_configs(self.mult.bits)[best - 1]
+            self.policy.set_config(target, new)
+            snap = self.telemetry.snapshot().get(target)
+            if snap is not None and snap.get("bit_probs") is not None:
+                self.detector.rebase(target, snap["bit_probs"])
+            self._last_retune_step = self.step
+            ev = RetuneEvent(self.step, target, drift, old, new,
+                             float(scores[old_idx]), float(scores[best]))
+            self.retunes.append(ev)
+            self._emit(ev.describe())
+            version = None
+            if self.store is not None:
+                version = self.store.publish(self.policy)
+                self._emit(f"published policy v{version}")
+        _RETUNES.inc(1, kind="scalar")
+        _RETUNE_WALL.observe(time.perf_counter() - t0)
+        _RETUNE_GAIN.set(ev.old_score - ev.new_score, target=target)
+        if self.audit is not None:
+            self.audit.append(
+                "retune", step=self.step, target=target, drift=float(drift),
+                old="noswap" if old is None else old.short(),
+                new="noswap" if new is None else new.short(),
+                old_score=ev.old_score, new_score=ev.new_score,
+                predicted_gain=ev.old_score - ev.new_score,
+                store_version=version)
         return ev
 
     def retune_tiles(self, target: str, drift: float = 0.0) -> TileRetuneEvent:
@@ -394,39 +430,52 @@ class AdaptiveController:
         ``SwapPolicy.tile_grids`` entry — which serve replicas adopt with
         zero recompiles exactly like scalar configs (grids enter compiled
         steps as traced int32 values)."""
-        bufs = self.tile_buffers[target]
-        gm = len(bufs)
-        a_tiles = np.stack([b.operands()[0] for b in bufs])
-        b_tiles = np.stack([b.operands()[1] for b in bufs])
-        scores = np.asarray(_score_configs_tiled(
-            self.mult, jnp.asarray(a_tiles), jnp.asarray(b_tiles),
-            self.tile_sweep, self.cfg.metric))          # (gm, 2M+1)
-        best = np.argmin(scores, axis=1)                # per-tile winner
-        sweep = np.asarray(self.tile_sweep)
-        grid = sweep[best][:, None, :]                  # (gm, 1, 3)
+        t0 = time.perf_counter()
+        with obs.span("retune_tiles", cat="adapt", target=target, drift=drift):
+            bufs = self.tile_buffers[target]
+            gm = len(bufs)
+            a_tiles = np.stack([b.operands()[0] for b in bufs])
+            b_tiles = np.stack([b.operands()[1] for b in bufs])
+            scores = np.asarray(_score_configs_tiled(
+                self.mult, jnp.asarray(a_tiles), jnp.asarray(b_tiles),
+                self.tile_sweep, self.cfg.metric))          # (gm, 2M+1)
+            best = np.argmin(scores, axis=1)                # per-tile winner
+            sweep = np.asarray(self.tile_sweep)
+            grid = sweep[best][:, None, :]                  # (gm, 1, 3)
 
-        # incumbent per-tile score (for the event log): the currently
-        # published grid resampled to this granularity, mapped into the
-        # tile sweep (B-side incumbents fall back to NoSwap = index 0,
-        # matching their per-row-tile execution semantics)
-        old_grid = self.policy.tile_grid(target, gm, 1)
-        old_idx = np.zeros(gm, np.int64)
-        for t in range(gm):
-            hit = np.nonzero((sweep == old_grid[t, 0]).all(1))[0]
-            old_idx[t] = hit[0] if len(hit) else 0
-        old_score = float(np.mean(scores[np.arange(gm), old_idx]))
-        new_score = float(np.mean(scores[np.arange(gm), best]))
+            # incumbent per-tile score (for the event log): the currently
+            # published grid resampled to this granularity, mapped into the
+            # tile sweep (B-side incumbents fall back to NoSwap = index 0,
+            # matching their per-row-tile execution semantics)
+            old_grid = self.policy.tile_grid(target, gm, 1)
+            old_idx = np.zeros(gm, np.int64)
+            for t in range(gm):
+                hit = np.nonzero((sweep == old_grid[t, 0]).all(1))[0]
+                old_idx[t] = hit[0] if len(hit) else 0
+            old_score = float(np.mean(scores[np.arange(gm), old_idx]))
+            new_score = float(np.mean(scores[np.arange(gm), best]))
 
-        self.policy.set_tile_grid(target, grid)
-        snap = self.telemetry.snapshot().get(tile_key(target))
-        if snap is not None and snap.get("bit_probs") is not None:
-            self.detector.rebase(tile_key(target), snap["bit_probs"])
-        self._last_retune_step = self.step
-        ev = TileRetuneEvent(self.step, target, drift, grid,
-                             old_score, new_score)
-        self.tile_retunes.append(ev)
-        self._emit(ev.describe())
-        if self.store is not None:
-            v = self.store.publish(self.policy)
-            self._emit(f"published policy v{v}")
+            self.policy.set_tile_grid(target, grid)
+            snap = self.telemetry.snapshot().get(tile_key(target))
+            if snap is not None and snap.get("bit_probs") is not None:
+                self.detector.rebase(tile_key(target), snap["bit_probs"])
+            self._last_retune_step = self.step
+            ev = TileRetuneEvent(self.step, target, drift, grid,
+                                 old_score, new_score)
+            self.tile_retunes.append(ev)
+            self._emit(ev.describe())
+            version = None
+            if self.store is not None:
+                version = self.store.publish(self.policy)
+                self._emit(f"published policy v{version}")
+        _RETUNES.inc(1, kind="tile")
+        _RETUNE_WALL.observe(time.perf_counter() - t0)
+        _RETUNE_GAIN.set(old_score - new_score, target=target)
+        if self.audit is not None:
+            self.audit.append(
+                "tile_retune", step=self.step, target=target,
+                drift=float(drift), tile_rows=gm,
+                grid_digest=obs.grid_digest(grid),
+                old_score=old_score, new_score=new_score,
+                predicted_gain=old_score - new_score, store_version=version)
         return ev

@@ -19,7 +19,16 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["DriftConfig", "DriftDetector", "drift_score"]
+
+# live per-target drift score (repro.obs): exported every detector sweep,
+# not only when the threshold trips — dashboards see drift build up before
+# a re-tune fires
+_DRIFT_SCORE = obs.default_registry().gauge(
+    "repro_drift_score",
+    "mean |bit-probability shift| vs the tuned-on reference, per target")
 
 
 def drift_score(ref: np.ndarray, cur: np.ndarray) -> float:
@@ -67,6 +76,7 @@ class DriftDetector:
         drifted = []
         for target, snap in snapshot.items():
             s = self.score(target, snap.get("bit_probs"))
+            _DRIFT_SCORE.set(s, target=target)
             if (s > self.cfg.threshold
                     and self._steps_since_rebase.get(target, 0) >= self.cfg.min_steps):
                 drifted.append((target, s))

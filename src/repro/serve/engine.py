@@ -61,16 +61,38 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import decode_step, prefill
 
 __all__ = ["ServeConfig", "generate", "token_step", "prefill_one"]
+
+# host-side observability (repro.obs): program-install accounting per cache
+# kind — the live "zero recompiles" signal CI gates — plus dispatch-wall
+# histograms.  All updates happen OUTSIDE traced code, so instrumentation
+# cannot perturb tokens, telemetry, or compiled programs (tested).
+_PREFILL_WALL = obs.default_registry().histogram(
+    "repro_prefill_dispatch_seconds",
+    "host wall of generate()'s prefill + first-token sample "
+    "(async dispatch: excludes on-device completion)")
+_DECODE_WALL = obs.default_registry().histogram(
+    "repro_decode_dispatch_seconds",
+    "host wall of generate()'s decode-loop dispatch by path "
+    "(async dispatch: excludes on-device completion)")
+_DECODE_TOKENS = obs.default_registry().counter(
+    "repro_decode_tokens_total",
+    "tokens produced by generate() decode loops (slots x steps)")
+_SLOTS_RETIRED = obs.default_registry().counter(
+    "repro_slots_retired_total",
+    "slots whose done-flag fires before the scan/budget end "
+    "(per-slot token budgets below the generation length)")
 
 
 @dataclasses.dataclass
@@ -144,16 +166,19 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
 
     pl = (None if prompt_lens is None
           else jnp.asarray(prompt_lens, jnp.int32).reshape(B))
-    logits, cache = prefill(params, prompt_batch, cfg, par,
-                            max_cache_len=max_len, prompt_lens=pl)
-    key = jax.random.PRNGKey(scfg.seed)
-    sample = _sampler(scfg)
-    if pl is None:
-        tok = sample(logits, key)
-    else:
-        # pad-mask path: the next token conditions on the last REAL prompt
-        # position, not the pad tail
-        tok = sample(logits[jnp.arange(B), pl - 1][:, None], key)
+    t0 = time.perf_counter()
+    with obs.span("prefill", cat="engine", batch=B, seq=S):
+        logits, cache = prefill(params, prompt_batch, cfg, par,
+                                max_cache_len=max_len, prompt_lens=pl)
+        key = jax.random.PRNGKey(scfg.seed)
+        sample = _sampler(scfg)
+        if pl is None:
+            tok = sample(logits, key)
+        else:
+            # pad-mask path: the next token conditions on the last REAL prompt
+            # position, not the pad tail
+            tok = sample(logits[jnp.arange(B), pl - 1][:, None], key)
+    _PREFILL_WALL.observe(time.perf_counter() - t0)
     n_steps = scfg.max_new_tokens - 1
     if vec:
         pos0 = pl if pl is not None else jnp.full((B,), S, jnp.int32)
@@ -163,16 +188,33 @@ def generate(params, prompt_batch, cfg: ModelConfig, scfg: ServeConfig,
     else:
         pos0, budget = jnp.int32(S), None      # scalar legacy path
 
+    if budget is not None:
+        # retirement accounting: a slot whose budget sits below the full
+        # generation length WILL freeze before the scan end (host-known —
+        # the done-flag math is deterministic in slot_new_tokens)
+        _SLOTS_RETIRED.inc(int(np.sum(np.asarray(budget) < n_steps)))
+
     if adaptive is None and param_hook is None and scfg.fused:
         assert mesh is None, "mesh= requires the adaptive fused path"
-        return _generate_fused(params, cache, tok, key, pos0, budget, cfg,
-                               scfg, par)
-    if adaptive is not None and param_hook is None and scfg.fused:
-        return _generate_fused_adaptive(params, cache, tok, key, pos0, budget,
-                                        B, cfg, scfg, par, adaptive, mesh)
-    assert mesh is None, "mesh= requires the adaptive fused path (no param_hook)"
-    return _generate_stepwise(params, cache, tok, key, pos0, budget, cfg,
-                              scfg, par, adaptive, param_hook)
+        path, run = "fused", lambda: _generate_fused(
+            params, cache, tok, key, pos0, budget, cfg, scfg, par)
+    elif adaptive is not None and param_hook is None and scfg.fused:
+        path, run = "fused_adaptive", lambda: _generate_fused_adaptive(
+            params, cache, tok, key, pos0, budget, B, cfg, scfg, par,
+            adaptive, mesh)
+    else:
+        assert mesh is None, \
+            "mesh= requires the adaptive fused path (no param_hook)"
+        path, run = "stepwise", lambda: _generate_stepwise(
+            params, cache, tok, key, pos0, budget, cfg, scfg, par, adaptive,
+            param_hook)
+    t0 = time.perf_counter()
+    with obs.span("decode", cat="engine", path=path, batch=B,
+                  steps=scfg.max_new_tokens):
+        out = run()
+    _DECODE_WALL.observe(time.perf_counter() - t0, path=path)
+    _DECODE_TOKENS.inc(B * scfg.max_new_tokens)
+    return out
 
 
 @functools.lru_cache(maxsize=64)
@@ -184,6 +226,7 @@ def _fused_decode_fn(cfg, par, n_steps: int, temperature: float,
     pre-PR5 program: one dynamic_update_slice cache write per step); the
     ``vectorized`` variant takes per-slot (B,) positions and token budgets
     as traced vectors, so retired slots freeze without a branch."""
+    obs.count_retrace("fused")          # lru miss == new compiled program
     scfg = ServeConfig(temperature=temperature)
     sample = _sampler(scfg)
 
@@ -275,6 +318,7 @@ def _adaptive_decode_fn(cfg, par, n_steps: int, temperature: float,
            tile_rows, vectorized)
     if key in _ADAPTIVE_FNS:
         return _ADAPTIVE_FNS[key]
+    obs.count_retrace("fused_adaptive")   # cache miss == new compiled program
 
     from repro.runtime import ax_scope
 
@@ -492,6 +536,7 @@ def _token_step_fn(cfg, par, temperature: float, adaptive: bool, mesh,
     fkey = (cfg, par, temperature, adaptive, mesh, treedef, batch, tile_rows)
     if fkey in _TOKEN_FNS:
         return _TOKEN_FNS[fkey]
+    obs.count_retrace("token_step")       # cache miss == new compiled program
 
     sample = _sampler(ServeConfig(temperature=temperature))
     if mesh is not None:
@@ -563,6 +608,7 @@ def _prefill_one_fn(cfg, par, bucket: int, max_cache_len: int,
     forward, first token sampled at the last real position, cache padded to
     the shared ``max_cache_len`` so it splices straight into any slot of
     the token-granular decode cache."""
+    obs.count_retrace("prefill")        # lru miss == new compiled program
     sample = _sampler(ServeConfig(temperature=temperature))
 
     @jax.jit
