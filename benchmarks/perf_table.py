@@ -132,13 +132,28 @@ def bench_kernel(quick: bool):
     grid = jnp.broadcast_to(jnp.asarray((1, 3, 0), jnp.int32), (1, 1, 3))
 
     out = {"shape": [m, m, m], "block": [m, m, m]}
+    # interleave the four variants inside ONE best-of-reps loop: interpret
+    # mode takes tens of ms per call, so timing rank1 and slab8 in separate
+    # sequential blocks lets host-load drift land on one side of the ratio
+    # (the regress.py ratio floors then trip on pure noise); round-robin
+    # sampling puts every load spike on all variants equally
+    fns = {}
     for name, ks in (("rank1", 1), ("slab8", 8)):
-        t = _time(lambda a, b: K.ax_matmul(a, b, mult, swap, k_slab=ks), a, b, n=reps)
-        out[f"static_{name}_us"] = 1e6 * t
-        tg = _time(lambda a, b: K.ax_matmul_grid(a, b, mult, grid, k_slab=ks),
-                   a, b, n=reps)
-        out[f"grid_{name}_us"] = 1e6 * tg
+        fns[f"static_{name}"] = (
+            lambda a, b, ks=ks: K.ax_matmul(a, b, mult, swap, k_slab=ks))
+        fns[f"grid_{name}"] = (
+            lambda a, b, ks=ks: K.ax_matmul_grid(a, b, mult, grid, k_slab=ks))
         out[f"{name}_reduction_steps_per_tile"] = m // ks
+    best = {k: float("inf") for k in fns}
+    for f in fns.values():
+        jax.block_until_ready(f(a, b))         # compile + warm
+    for _ in range(reps):
+        for k, f in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(a, b))
+            best[k] = min(best[k], time.perf_counter() - t0)
+    for k, t in best.items():
+        out[f"{k}_us"] = 1e6 * t
     out["reduction_step_ratio"] = (out["rank1_reduction_steps_per_tile"]
                                    / out["slab8_reduction_steps_per_tile"])
     out["static_speedup"] = out["static_rank1_us"] / out["static_slab8_us"]

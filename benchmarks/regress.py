@@ -8,7 +8,7 @@ artifact against the committed baseline and fails on any counter that got
 worse; wall-time movement is reported informationally only.
 
     PYTHONPATH=src python -m benchmarks.run --quick --check \
-        [--baseline benchmarks/baselines/BENCH_5.json]
+        [--baseline benchmarks/baselines/BENCH_6.json]
 """
 from __future__ import annotations
 
@@ -52,6 +52,28 @@ RULES = [
     # observability (PR 6): the live recompile gauge the scheduler asserts
     # on — decode retraces after warmup must be exactly zero
     ("serving.decode_retraces_post_warmup", "le"),
+    # robustness (PR 7): recovery outcomes of the chaos_table fault suite.
+    # All 'true'/'ge:' rules read the NEW artifact only, so a baseline that
+    # predates the chaos section can never skip-neutralize the gate once
+    # the section exists.
+    ("serving.shed_respects_bound", "true"),
+    ("serving.timeouts_match_deadlines", "true"),
+    ("chaos.publish_crash_atomic", "true"),
+    ("chaos.torn_current_recovered", "true"),
+    ("chaos.corrupt_policy_fallback", "true"),
+    ("chaos.poison_kept_out", "true"),
+    ("chaos.canary_rejected", "true"),
+    # every triggered rollback recovered (counts compared inside the bool),
+    # and the replica survived at least as many kills as were injected
+    ("chaos.rollbacks_all_recovered", "true"),
+    ("chaos.rollbacks_recovered", "ge:chaos.rollbacks_triggered"),
+    ("chaos.replica_crashes_survived", "ge:chaos.replica_crashes_injected"),
+    ("chaos.post_recovery_mae_within_band", "true"),
+    ("chaos.stall_deadlines_respected", "true"),
+    ("chaos.shed_respects_bound", "true"),
+    ("chaos.armed_idle_bit_identical", "true"),
+    ("chaos.armed_idle_zero_retraces", "true"),
+    ("chaos.survived_all", "true"),
     # ratio floors (PR 6): Pallas slab + K-stacked dynamic-dispatch
     # speedups are same-run wall ratios, gated against absolute minima
     ("kernel_reduction.static_speedup", "ratio>=0.6"),
@@ -71,6 +93,8 @@ WALL_NOTES = [
     "serving.wave_e2e_p99_s",
     "serving.token_e2e_p99_s",
     "serving.token_ttft_p99_s",
+    "chaos.post_recovery_mae",
+    "chaos.baseline_mae",
 ]
 
 

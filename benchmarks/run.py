@@ -4,13 +4,13 @@
 
 Prints each table and a ``name,us_per_call,derived`` CSV summary line per
 benchmark (derived = the table's headline number).  Also runs the hot-path
-perf microbenchmarks plus the fleet- and token-granular-serving
-microbenchmarks and writes ``BENCH_6.json`` (dispatch / reduction / decode /
-fleet / tile-adaptation / serving numbers — this PR's point on the perf
-trajectory).  ``--check`` then diffs the artifact's deterministic counters
-against the committed baseline (``benchmarks/baselines/BENCH_5.json``) and
-exits non-zero on regression — wall times are reported informationally only
-(see ``benchmarks.regress``).
+perf microbenchmarks plus the fleet-, token-granular-serving-, and
+chaos-recovery microbenchmarks and writes ``BENCH_7.json`` (dispatch /
+reduction / decode / fleet / tile-adaptation / serving / chaos numbers —
+this PR's point on the perf trajectory).  ``--check`` then diffs the
+artifact's deterministic counters against the committed baseline
+(``benchmarks/baselines/BENCH_6.json``) and exits non-zero on regression —
+wall times are reported informationally only (see ``benchmarks.regress``).
 """
 from __future__ import annotations
 
@@ -18,19 +18,20 @@ import argparse
 import sys
 import time
 
-from . import (adaptive_table, app_table, component_table, fleet_table,
-               hw_table, perf_table, regress, roofline_table, serving_table)
+from . import (adaptive_table, app_table, chaos_table, component_table,
+               fleet_table, hw_table, perf_table, regress, roofline_table,
+               serving_table)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small fast subset")
     ap.add_argument("--full", action="store_true", help="all multipliers + ALL parts")
-    ap.add_argument("--bench-out", default="BENCH_6.json",
-                    help="perf/fleet/tile/serving JSON artifact path")
+    ap.add_argument("--bench-out", default="BENCH_7.json",
+                    help="perf/fleet/tile/serving/chaos JSON artifact path")
     ap.add_argument("--check", action="store_true",
                     help="fail on deterministic-counter regression vs --baseline")
-    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_5.json",
+    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_6.json",
                     help="committed baseline artifact for --check")
     args = ap.parse_args()
 
@@ -96,11 +97,21 @@ def main() -> None:
                f" splices={srv['token_splices']}"
                f" bit_identical={srv['bit_identical_requests']}")
 
+    t0 = time.time()
+    cha = chaos_table.run(quick=args.quick)
+    print("\n" + chaos_table.format_table(cha))
+    csv.append(f"chaos_table,{1e6*(time.time()-t0):.0f},"
+               f"faults={cha['faults_injected']}"
+               f" rollbacks={cha['rollbacks_recovered']}/"
+               f"{cha['rollbacks_triggered']}"
+               f" survived_all={cha['survived_all']}")
+
     perf["fleet"] = fleet
     perf["tile_adaptation"] = ad["tile"]
     perf["serving"] = srv
+    perf["chaos"] = cha
     perf_table.write_json(perf, args.bench_out)
-    print(f"(perf+fleet+tile+serving tables written to {args.bench_out})")
+    print(f"(perf+fleet+tile+serving+chaos tables written to {args.bench_out})")
 
     t0 = time.time()
     hw = hw_table.run()

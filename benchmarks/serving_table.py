@@ -20,6 +20,13 @@ meet or beat wave mode — the whole point of the feature), zero recompiles
 of the token-step program across splices and a policy update.  Wall
 tokens/s is informational.
 
+A third serve (PR 7) exercises the hardened admission path: a bounded
+queue sheds overflow deterministically (every submit happens before the
+drain, so ``shed == submitted - max_queue`` exactly), and zero-deadline
+requests time out — under an injected per-step stall
+(``fleet.chaos``) — without crashing the drain.  ``shed_respects_bound``
+and ``timeouts_match_deadlines`` join the CI gate.
+
     PYTHONPATH=src python -m benchmarks.serving_table [--quick]
 """
 from __future__ import annotations
@@ -125,6 +132,35 @@ def run(quick: bool = False):
     sizes1 = [f._cache_size() for f in E._TOKEN_FNS.values()]
     zero_recompiles = bool(sizes1 == sizes0 and all(s == 1 for s in sizes1))
 
+    # hardened admission (PR 7): bounded queue + deadlines under a stalled
+    # step — all submits land before the drain, so shed and timeout counts
+    # are deterministic
+    from repro.fleet import chaos
+
+    max_queue = 6
+    bat3 = ContinuousBatcher(
+        params, cfg,
+        BatcherConfig(n_slots=4, prompt_buckets=buckets, new_token_bucket=T,
+                      token_granular=True, max_queue=max_queue),
+        adaptive=_controller(cfg))
+    trace3 = axbench_trace(cfg, max_queue + 2, max_prompt=max(buckets),
+                           max_new=T)
+    expired_rids = {4, 5}                      # lapse before any step runs
+    accepted = [bat3.submit(Request(r.rid, r.tokens.copy(), r.max_new,
+                                    deadline_s=(0.0 if r.rid in expired_rids
+                                                else None)))
+                for r in trace3]
+    stall = chaos.FaultPlan([chaos.FaultSpec("sched.step", "stall_step",
+                                             at=1, arg=0.002)])
+    with chaos.active(stall):
+        done3 = bat3.run()
+    status3 = {c.rid: c.status for c in done3}
+    shed_ok = (accepted == [True] * max_queue + [False] * 2
+               and bat3.stats["shed"] == 2)
+    timeouts_ok = all(
+        status3.get(rid) == ("timeout" if rid in expired_rids else "ok")
+        for rid in range(max_queue))
+
     return {
         "bench": "serving_table",
         "quick": quick,
@@ -141,6 +177,11 @@ def run(quick: bool = False):
         "zero_recompiles": zero_recompiles,
         "decode_retraces_post_warmup":
             tok_bat.stats["decode_retraces_post_warmup"],
+        "shed": bat3.stats["shed"],
+        "timeouts": bat3.stats["timeouts"],
+        "stragglers": bat3.stats["stragglers"],
+        "shed_respects_bound": bool(shed_ok),
+        "timeouts_match_deadlines": bool(timeouts_ok),
         "wave_ttft_p50_s": wave_lat.get("ttft_p50"),
         "wave_ttft_p99_s": wave_lat.get("ttft_p99"),
         "wave_e2e_p50_s": wave_lat.get("e2e_p50"),
@@ -178,6 +219,11 @@ def format_table(out) -> str:
         f"{out['bit_identical_requests']}",
         f"zero recompiles across splices + policy update:  "
         f"{out['zero_recompiles']}",
+        (f"bounded queue + deadlines under injected stall: "
+         f"{out['shed']} shed (bound ok: {out['shed_respects_bound']}), "
+         f"{out['timeouts']} timeouts (deadlines ok: "
+         f"{out['timeouts_match_deadlines']}), "
+         f"{out['stragglers']} straggler steps flagged"),
         "  (* CPU wall in this container; occupancy / identity /"
         " recompile counts are the gate metrics)",
     ]

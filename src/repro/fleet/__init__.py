@@ -17,7 +17,13 @@ Makes the online adaptive SWAPPER runtime mesh-native:
               request into a finished slot mid-flight via per-slot cache
               positions (zero recompiles across waves, splices, policy
               updates, and reader syncs)
+  chaos     — deterministic fault-injection harness (``FaultPlan`` /
+              ``ChaosHarness``) exercising the recovery paths above: torn
+              publishes, corrupt policy JSON, poisoned telemetry, stalled
+              steps, replica kills (docs/robustness.md)
 """
+from . import chaos
+from .chaos import ChaosHarness, FaultPlan, FaultSpec, InjectedFault
 from .collect import (
     aggregate_records,
     batch_axis_names,
@@ -38,4 +44,9 @@ __all__ = [
     "Request",
     "PolicyReader",
     "PolicyStore",
+    "chaos",
+    "ChaosHarness",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
 ]

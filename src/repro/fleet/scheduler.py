@@ -51,6 +51,9 @@ from repro import obs
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.serve import ServeConfig, generate
 from repro.serve.engine import prefill_one, splice_slot_jit, token_step
+from repro.train.fault import StragglerWatchdog
+
+from . import chaos
 
 __all__ = ["Request", "Completion", "BatcherConfig", "ContinuousBatcher"]
 
@@ -90,6 +93,15 @@ _POST_WARMUP_RETRACES = _REG.gauge(
     "token_step program installs after the first decode step of a drain — "
     "the live zero-recompile invariant (asserted 0; splices and policy "
     "updates must never retrace)")
+_SHED = _REG.counter(
+    "repro_requests_shed_total",
+    "admissions refused because the bounded queue was full (load-shedding)")
+_TIMEOUTS = _REG.counter(
+    "repro_request_timeouts_total",
+    "requests retired past their deadline_s (by where: queued / decoding)")
+_STRAGGLERS = _REG.counter(
+    "repro_step_stragglers_total",
+    "decode steps/waves flagged slow by the straggler watchdog")
 
 
 @dataclasses.dataclass
@@ -97,6 +109,10 @@ class Request:
     rid: int
     tokens: np.ndarray          # (L,) int32 prompt
     max_new: int
+    # optional SLO: seconds from submit after which the request is retired
+    # as a `timeout` completion instead of (or mid-) decoding.  None = no
+    # deadline (the default keeps every existing call site byte-identical).
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -106,6 +122,7 @@ class Completion:
     wave: int                   # wave index (wave mode) / retire step (token)
     prompt_len: int
     bucket: int
+    status: str = "ok"          # "ok" | "timeout" (partial/empty tokens)
 
 
 @dataclasses.dataclass
@@ -117,6 +134,10 @@ class BatcherConfig:
     temperature: float = 0.0
     seed: int = 0
     token_granular: bool = False           # mid-flight slot splicing (greedy)
+    # admission control: refuse (shed) submits once this many requests wait;
+    # None = unbounded (the pre-hardening behavior)
+    max_queue: Optional[int] = None
+    straggler_factor: float = 3.0          # per-step watchdog (train/fault)
 
 
 class ContinuousBatcher:
@@ -167,8 +188,12 @@ class ContinuousBatcher:
         self._order: Dict[int, int] = {}     # rid -> arrival index (FIFO across buckets)
         self.stats = dict(waves=0, requests=0, real_tokens=0, padded_tokens=0,
                           filler_tokens=0, backfilled=0, splices=0,
-                          decode_steps=0, decode_retraces_post_warmup=0)
+                          decode_steps=0, decode_retraces_post_warmup=0,
+                          shed=0, timeouts=0, stragglers=0)
         self.mode = "token" if self.bcfg.token_granular else "wave"
+        # per-step (token mode) / per-wave straggler watchdog — the same
+        # trailing-median detector the train loop supervises with
+        self.watchdog = StragglerWatchdog(factor=self.bcfg.straggler_factor)
         self._submit_t: Dict[int, float] = {}    # rid -> submit perf_counter
         # per-request latency log (rid, bucket, prompt_len, max_new, ttft,
         # e2e seconds) — the source benchmarks/serving_table.py reduces to
@@ -198,7 +223,18 @@ class ContinuousBatcher:
             f"prompt length {prompt_len} exceeds largest bucket "
             f"{max(self.queues)}")
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  Returns False (and counts a shed) when the
+        bounded admission queue (``BatcherConfig.max_queue``) is full —
+        load-shedding at the door beats queueing work that will only time
+        out inside."""
+        if (self.bcfg.max_queue is not None
+                and self.pending() >= self.bcfg.max_queue):
+            self.stats["shed"] += 1
+            _SHED.inc(1)
+            obs.instant("shed", cat="scheduler", rid=req.rid,
+                        pending=self.pending())
+            return False
         assert req.max_new >= 1, req
         assert req.max_new <= self.bcfg.new_token_bucket, (
             f"request {req.rid}: max_new {req.max_new} > token bucket "
@@ -212,9 +248,52 @@ class ContinuousBatcher:
         obs.async_begin("request", req.rid, prompt_len=len(req.tokens),
                         max_new=req.max_new)
         self._update_queue_gauges()
+        return True
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
+
+    # -- deadlines -----------------------------------------------------
+    def _deadline_passed(self, req: Request) -> bool:
+        if req.deadline_s is None:
+            return False
+        t0 = self._submit_t.get(req.rid)
+        return t0 is not None and time.perf_counter() - t0 > req.deadline_s
+
+    def _timeout(self, req: Request, tokens, where: str) -> Completion:
+        """Retire ``req`` past its deadline: a ``timeout`` completion with
+        whatever tokens were generated so far (empty when still queued)."""
+        self.stats["timeouts"] += 1
+        _TIMEOUTS.inc(1, where=where)
+        e2e = time.perf_counter() - self._submit_t.pop(
+            req.rid, time.perf_counter())
+        self._record_latency(req, None, e2e, observe_ttft=False)
+        obs.instant("timeout", cat="scheduler", rid=req.rid, where=where)
+        obs.async_end("request", req.rid, status="timeout")
+        return Completion(req.rid, np.asarray(tokens, np.int32),
+                          self.wave if self.mode == "wave"
+                          else self.stats["decode_steps"],
+                          len(req.tokens), self.bucket_of(len(req.tokens)),
+                          status="timeout")
+
+    def _expire_queued(self) -> List[Completion]:
+        """Sweep the admission queues for requests whose deadline passed
+        while waiting; retires them as empty ``timeout`` completions."""
+        out = []
+        for q in self.queues.values():
+            expired = [r for r in q if self._deadline_passed(r)]
+            if expired:
+                dead = {r.rid for r in expired}
+                keep = [r for r in q if r.rid not in dead]
+                for r in expired:
+                    del self._order[r.rid]
+                    out.append(self._timeout(r, np.zeros(0, np.int32),
+                                             where="queued"))
+                q.clear()
+                q.extend(keep)
+        if out:
+            self._update_queue_gauges()
+        return out
 
     def max_cache_len(self) -> int:
         """One decode-cache length shared by every bucket: the decode
@@ -255,10 +334,17 @@ class ContinuousBatcher:
     # -- wave execution (the bit-exactness oracle) ---------------------
     def step(self) -> List[Completion]:
         """Run one wave; returns the completions it retired (empty when the
-        queues are drained)."""
+        queues are drained).  Requests whose deadline lapsed while queued
+        retire first as ``timeout`` completions (never dispatched)."""
+        faults = chaos.fire("sched.step", wave=self.wave, mode=self.mode)
+        if any(f.kind == "crash_replica" for f in faults):
+            raise chaos.InjectedFault("sched.step: replica killed")
+        chaos.maybe_stall(faults, default=0.05)
+        timed_out = self._expire_queued()
         bucket = self._pick_bucket()
         if bucket is None:
-            return []
+            return timed_out
+        t_wave = time.perf_counter()
         bc = self.bcfg
         q = self.queues[bucket]
         admitted = []
@@ -325,19 +411,31 @@ class ContinuousBatcher:
         _ADMISSIONS.inc(len(admitted), mode=self.mode)
         _BACKFILLS.inc(n_backfilled)
         _OCCUPANCY.set(self.occupancy(), mode=self.mode)
+        if self.watchdog.observe(t_done - t_wave):
+            self.stats["stragglers"] += 1
+            _STRAGGLERS.inc(1, mode=self.mode)
+            obs.instant("straggler", cat="scheduler", wave=self.wave,
+                        wall=t_done - t_wave)
         self.wave += 1
-        return done
+        return timed_out + done
 
     # -- token-granular execution --------------------------------------
     def _admit_into(self, slot: int, state: list, pos: np.ndarray,
                     tok: np.ndarray, cache, key):
         """Prefill the next FIFO request and splice it into ``slot``'s cache
         region; returns the (possibly updated) cache.  ``state[slot]`` stays
-        ``None`` when the queues are drained."""
+        ``None`` when the queues are drained.  Requests whose deadline
+        lapsed while queued are retired as ``timeout`` completions instead
+        of being prefilled (the prefill would be wasted work)."""
+        expired = []
         req = self._pop_oldest()
+        while req is not None and self._deadline_passed(req):
+            expired.append(self._timeout(req, np.zeros(0, np.int32),
+                                         where="queued"))
+            req = self._pop_oldest()
         if req is None:
             state[slot] = None
-            return cache, []
+            return cache, expired
         if self.adaptive is not None and hasattr(self.adaptive, "poll"):
             self.adaptive.poll()
         L = len(req.tokens)
@@ -364,24 +462,30 @@ class ContinuousBatcher:
         self.stats["padded_tokens"] += bucket - L
         _ADMISSIONS.inc(1, mode=self.mode)
         self._update_queue_gauges()
-        done = []
         if state[slot]["remaining"] == 0:    # max_new == 1: retire in place
-            done = self._retire(slot, state)
-        return cache, done
+            expired.extend(self._retire(slot, state))
+        return cache, expired
 
-    def _retire(self, slot: int, state: list) -> List[Completion]:
+    def _retire(self, slot: int, state: list,
+                status: str = "ok") -> List[Completion]:
         st = state[slot]
         state[slot] = None
         req = st["req"]
+        if status == "timeout":              # mid-decode deadline: keep the
+            self.stats["timeouts"] += 1      # partial tokens, mark the cut
+            _TIMEOUTS.inc(1, where="decoding")
+            obs.instant("timeout", cat="scheduler", rid=req.rid,
+                        where="decoding")
         e2e = time.perf_counter() - self._submit_t.pop(
             req.rid, time.perf_counter())
         # TTFT was already observed at the admission splice
         self._record_latency(req, st.get("ttft"), e2e, observe_ttft=False)
         obs.instant("retire", cat="scheduler", rid=req.rid, slot=slot)
-        obs.async_end("request", req.rid, step=self.stats["decode_steps"])
+        obs.async_end("request", req.rid, step=self.stats["decode_steps"],
+                      status=status)
         return [Completion(req.rid, np.asarray(st["toks"], np.int32),
                            self.stats["decode_steps"], len(req.tokens),
-                           self.bucket_of(len(req.tokens)))]
+                           self.bucket_of(len(req.tokens)), status=status)]
 
     def _run_token_granular(self) -> List[Completion]:
         """Drain the queues with mid-flight admission: one compiled step
@@ -411,6 +515,12 @@ class ContinuousBatcher:
         # installs land during the drain (the live gauge CI gates).
         warmup_installs = None
         while any(st is not None for st in state):
+            faults = chaos.fire("sched.step",
+                                step=self.stats["decode_steps"],
+                                mode=self.mode)
+            if any(f.kind == "crash_replica" for f in faults):
+                raise chaos.InjectedFault("sched.step: replica killed")
+            chaos.maybe_stall(faults, default=0.05)
             active_np = np.asarray([st is not None for st in state])
             key, sub = jax.random.split(key)
             gate = (self.stats["decode_steps"] % k_obs == 0)
@@ -423,7 +533,13 @@ class ContinuousBatcher:
                     jnp.asarray(pos), jnp.asarray(active_np), self.cfg,
                     self.par, temperature=bc.temperature,
                     adaptive=self.adaptive, mesh=self.mesh, gate=gate)
-            _STEP_WALL.observe(time.perf_counter() - t_step)
+            step_wall = time.perf_counter() - t_step
+            _STEP_WALL.observe(step_wall)
+            if self.watchdog.observe(step_wall):
+                self.stats["stragglers"] += 1
+                _STRAGGLERS.inc(1, mode=self.mode)
+                obs.instant("straggler", cat="scheduler",
+                            step=self.stats["decode_steps"], wall=step_wall)
             if warmup_installs is None:
                 warmup_installs = obs.retrace_total("token_step")
             if self.adaptive is not None:
@@ -447,8 +563,11 @@ class ContinuousBatcher:
                     continue
                 st["toks"].append(int(tok[s]))
                 st["remaining"] -= 1
-                if st["remaining"] == 0:
-                    done.extend(self._retire(s, state))
+                timed_out = (st["remaining"] > 0
+                             and self._deadline_passed(st["req"]))
+                if st["remaining"] == 0 or timed_out:
+                    done.extend(self._retire(
+                        s, state, status="timeout" if timed_out else "ok"))
                     cache, d = self._admit_into(s, state, pos, tok, cache, key)
                     done.extend(d)
                     if state[s] is not None:
@@ -510,6 +629,8 @@ class ContinuousBatcher:
                 f"requests={s['requests']} splices={s['splices']} "
                 f"backfilled={s['backfilled']} "
                 f"retraces={s['decode_retraces_post_warmup']} "
+                f"shed={s['shed']} timeouts={s['timeouts']} "
+                f"stragglers={s['stragglers']} "
                 f"slot_util={self.occupancy():.2f} "
                 f"(real={s['real_tokens']} padded={s['padded_tokens']} "
                 f"filler={s['filler_tokens']})")

@@ -27,10 +27,13 @@ from __future__ import annotations
 
 import os
 import re
+import time
 from typing import List, Optional, Sequence, Tuple
 
 from repro import obs
 from repro.runtime.policy import SwapPolicy
+
+from . import chaos
 
 __all__ = ["PolicyStore", "PolicyReader"]
 
@@ -38,6 +41,13 @@ _CURRENT = "CURRENT"
 _HEARTBEAT = "HEARTBEAT"
 _FMT = "policy_v{:06d}.json"
 _RX = re.compile(r"^policy_v(\d{6})\.json$")
+_CAND_SUFFIX = ".cand"
+_RX_CAND = re.compile(r"^policy_v(\d{6})\.json\.cand$")
+_RX_DEAD = re.compile(r"^policy_v(\d{6})\.json\.cand\.rejected$")
+
+# reader-side load failures a replica must degrade through, never crash on:
+# pruned/missing files, torn JSON, schema-mangled documents
+_READ_ERRS = (OSError, ValueError, KeyError, TypeError)
 
 # host-side observability (repro.obs).  The published-version gauge plus the
 # per-replica staleness gauge together disambiguate the two zero-lag cases:
@@ -58,6 +68,16 @@ _ADOPTIONS = _REG.counter(
 _POLL_FAST = _REG.counter(
     "repro_policy_poll_total",
     "PolicyReader.poll calls by path (heartbeat fast-path vs full read)")
+_READ_ERRORS = _REG.counter(
+    "repro_store_read_errors",
+    "reader-side policy load failures degraded through (pruned/corrupt "
+    "CURRENT or policy JSON), by exception type")
+_ROLLBACKS_STORE = _REG.counter(
+    "repro_store_rollbacks_total",
+    "CURRENT re-points to an older (last-good) version")
+_RECOVERED_TMP = _REG.counter(
+    "repro_store_recovered_tmp_total",
+    "orphaned publish temp files swept at store open (crash mid-publish)")
 
 
 class PolicyStore:
@@ -70,14 +90,36 @@ class PolicyStore:
         <root>/policy_v000002.json
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, recover_stale_s: float = 60.0):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._last_published: Optional[int] = None
+        self._recover(recover_stale_s)
+
+    def _recover(self, stale_s: float) -> None:
+        """Crash-recovery sweep at open: remove ``*.tmp`` orphans left by a
+        writer killed between temp write and rename.  Only *stale* orphans
+        (older than ``stale_s``) are swept — a fresh tmp may belong to a
+        publish in flight in another process, and removing it would turn a
+        reader's open into a writer crash."""
+        now = time.time()
+        for fn in os.listdir(self.root):
+            if not fn.endswith(".tmp"):
+                continue
+            path = os.path.join(self.root, fn)
+            try:
+                if now - os.stat(path).st_mtime >= stale_s:
+                    os.remove(path)
+                    _RECOVERED_TMP.inc(1)
+            except OSError:
+                continue                     # raced with another sweeper
 
     # -- paths ---------------------------------------------------------
     def _path(self, version: int) -> str:
         return os.path.join(self.root, _FMT.format(version))
+
+    def _cand_path(self, version: int) -> str:
+        return self._path(version) + _CAND_SUFFIX
 
     def versions(self) -> List[int]:
         out = []
@@ -85,6 +127,17 @@ class PolicyStore:
             m = _RX.match(fn)
             if m:
                 out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _all_allocated(self) -> List[int]:
+        """Every version number with a file on disk — promoted AND pending
+        candidates — so allocation never reuses (and overwrites) a number
+        after a rollback or a rejected candidate."""
+        out = set(self.versions())
+        for fn in os.listdir(self.root):
+            m = _RX_CAND.match(fn) or _RX_DEAD.match(fn)
+            if m:
+                out.add(int(m.group(1)))
         return sorted(out)
 
     # -- reader side ---------------------------------------------------
@@ -114,50 +167,190 @@ class PolicyStore:
                 continue
         return None
 
+    def load_newest_loadable(self) -> Optional[Tuple[int, SwapPolicy]]:
+        """(version, policy) of the newest version that actually parses —
+        the reader's last line of defense when CURRENT is torn/pruned and
+        the newest file is corrupt.  Never raises; None for an empty (or
+        fully corrupt) store."""
+        for v in reversed(self.versions()):
+            try:
+                return v, self.load(v)
+            except _READ_ERRS as e:
+                _READ_ERRORS.inc(1, error=type(e).__name__)
+                continue
+        return None
+
     # -- writer side ---------------------------------------------------
+    def _fsync_dir(self) -> None:
+        """fsync the store directory so a just-committed rename survives a
+        host crash, not only a process kill."""
+        try:
+            fd = os.open(self.root, os.O_RDONLY)
+        except OSError:
+            return                            # platform without dir-fsync
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
+
+    def _write_atomic(self, name: str, text: str) -> None:
+        """fsync'd temp + rename: a reader sees the old bytes or the new
+        bytes, never a torn file, and a committed write survives power loss."""
+        path = os.path.join(self.root, name)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        self._fsync_dir()
+
+    def _check_single_writer(self, cur: Optional[int]) -> None:
+        if (self._last_published is not None and cur is not None
+                and cur > self._last_published):
+            raise RuntimeError(
+                f"PolicyStore single-writer violation: on-disk version {cur} "
+                f"> last published {self._last_published} (second writer?)")
+
+    def _next_version(self) -> int:
+        """Next unused version number.  ``max(allocated) + 1`` rather than
+        ``CURRENT + 1``: after a rollback CURRENT points *behind* existing
+        immutable files, and candidate files also hold numbers — neither may
+        ever be overwritten."""
+        allocated = self._all_allocated()
+        cur = self.current_version() or 0
+        return max(allocated[-1] if allocated else 0, cur) + 1
+
     def publish(self, policy: SwapPolicy) -> int:
         """Persist ``policy`` as the next version and swing ``CURRENT``.
+
+        Crash-atomic: the version file and the CURRENT pointer are both
+        fsync'd temp+rename writes, so a kill at ANY point leaves either the
+        previous version current (version file may exist uncommitted — the
+        next publish allocates past it) or the new version fully committed.
+        Chaos site ``store.publish`` injects exactly those kills.
 
         Single-writer: raises if another writer advanced the store past this
         instance's last publish (split-brain guard — a fleet has exactly one
         re-tuning controller).  The policy's own ``version`` is rewritten to
         the store version so readers compare a single counter.
         """
+        faults = {f.kind for f in chaos.fire("store.publish")}
         cur = self.current_version()
-        if (self._last_published is not None and cur is not None
-                and cur > self._last_published):
-            raise RuntimeError(
-                f"PolicyStore single-writer violation: on-disk version {cur} "
-                f"> last published {self._last_published} (second writer?)")
-        version = (cur or 0) + 1
+        self._check_single_writer(cur)
+        version = self._next_version()
         policy.version = version
         path = self._path(version)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            f.write(policy.to_json())
-        os.replace(tmp, path)
+        if "kill_mid_write" in faults:
+            body = policy.to_json()
+            with open(path + ".tmp", "w") as f:
+                f.write(body[: len(body) // 2])   # torn temp, never renamed
+            raise chaos.InjectedFault("store.publish: killed mid temp write")
+        self._write_atomic(_FMT.format(version), policy.to_json())
         # heartbeat BEFORE the CURRENT swap: a crash between the two leaves
         # hb > CURRENT, which readers treat as "never cache, take the full
         # path" — degraded to pre-heartbeat polling, never a missed publish
         # (the reverse order could hide a committed version from fast-path
         # readers forever)
         self._touch_heartbeat(version)
-        cur_tmp = os.path.join(self.root, _CURRENT + ".tmp")
-        with open(cur_tmp, "w") as f:
-            f.write(str(version))
-        os.replace(cur_tmp, os.path.join(self.root, _CURRENT))
+        if "kill_before_current" in faults:
+            raise chaos.InjectedFault(
+                "store.publish: killed between heartbeat and CURRENT swap")
+        if "torn_current" in faults:
+            # tear the pointer the non-atomic way a buggy writer would (the
+            # production path above never does this): garbage bytes, then die
+            with open(os.path.join(self.root, _CURRENT), "w") as f:
+                f.write("torn\x00")
+            raise chaos.InjectedFault("store.publish: CURRENT torn mid-swap")
+        self._write_atomic(_CURRENT, str(version))
+        self._last_published = version
+        _PUBLISHED.set(version)
+        _PUBLISHES.inc(1)
+        for f in chaos.fire("store.after_publish", version=version):
+            if f.kind == "corrupt_policy":
+                with open(path, "w") as fh:
+                    fh.write('{"mult_name": "mu')   # truncated JSON
+        return version
+
+    # -- candidate / promote / rollback (guarded rollout) --------------
+    def publish_candidate(self, policy: SwapPolicy) -> int:
+        """Persist ``policy`` as ``policy_v{N}.json.cand`` WITHOUT touching
+        CURRENT or the heartbeat: readers never adopt a candidate (the
+        ``.cand`` suffix keeps it out of :meth:`versions`), but the retune
+        attempt is durably recorded before the canary runs.  Returns the
+        reserved version number."""
+        version = self._next_version()
+        policy.version = version
+        self._write_atomic(_FMT.format(version) + _CAND_SUFFIX,
+                           policy.to_json())
+        return version
+
+    def candidate_version(self) -> Optional[int]:
+        """Newest pending candidate version (None when none pending)."""
+        out = [int(m.group(1)) for fn in os.listdir(self.root)
+               if (m := _RX_CAND.match(fn))]
+        return max(out) if out else None
+
+    def promote(self, version: int) -> int:
+        """Graduate a candidate to a full version: rename ``.cand`` into the
+        immutable version file, then heartbeat + CURRENT swap exactly like
+        :meth:`publish` (same crash window semantics)."""
+        cand = self._cand_path(version)
+        cur = self.current_version()
+        self._check_single_writer(cur)
+        if os.path.exists(cand):
+            os.replace(cand, self._path(version))
+            self._fsync_dir()
+        elif not os.path.exists(self._path(version)):
+            raise FileNotFoundError(f"no candidate or version {version}")
+        self._touch_heartbeat(version)
+        self._write_atomic(_CURRENT, str(version))
         self._last_published = version
         _PUBLISHED.set(version)
         _PUBLISHES.inc(1)
         return version
 
+    def reject_candidate(self, version: int) -> None:
+        """Drop a canary-rejected candidate.  The file is renamed (not
+        removed) to ``.cand.rejected`` so its number stays allocated — the
+        audit trail references it and :meth:`_next_version` must never hand
+        the same number to a different policy — but it can no longer be
+        promoted or adopted."""
+        try:
+            os.replace(self._cand_path(version),
+                       self._cand_path(version) + ".rejected")
+        except FileNotFoundError:
+            pass
+
+    def rollback(self, version: int) -> int:
+        """Re-point CURRENT at an existing (last-good) version.  The
+        heartbeat is touched with the rollback target, which is safe because
+        readers compare heartbeats by *equality*, not order — a reader whose
+        cached heartbeat doesn't match takes the full path and adopts the
+        rolled-back version like any other publish."""
+        if not os.path.exists(self._path(version)):
+            raise FileNotFoundError(f"rollback target v{version} not on disk")
+        self._touch_heartbeat(version)
+        self._write_atomic(_CURRENT, str(version))
+        # keep the single-writer guard watermark at the HIGHEST version this
+        # writer ever committed: after rollback CURRENT < watermark is
+        # expected, and only a *third-party* advance past the watermark
+        # still trips the guard
+        self._last_published = max(self._last_published or 0, version)
+        _PUBLISHED.set(version)
+        _ROLLBACKS_STORE.inc(1)
+        return version
+
     def _touch_heartbeat(self, version: int) -> None:
         """Touch ``HEARTBEAT`` with ``mtime_ns == version``: readers
         fast-path their poll on one ``stat()`` of this file.  Setting the
-        mtime to the version (instead of wall time) makes the signal
-        strictly monotonic and immune to filesystem mtime granularity —
-        two publishes inside one clock quantum still produce two distinct
-        heartbeat values."""
+        mtime to the version (instead of wall time) makes the signal immune
+        to filesystem mtime granularity — two publishes inside one clock
+        quantum still produce two distinct heartbeat values.  Readers
+        compare heartbeats by EQUALITY (``hb == last seen``), never order:
+        a :meth:`rollback` legitimately moves the value backwards."""
         path = os.path.join(self.root, _HEARTBEAT)
         if not os.path.exists(path):
             with open(path, "w"):
@@ -201,7 +394,9 @@ class PolicyReader:
     replica)."""
 
     def __init__(self, store: PolicyStore, targets: Sequence[str],
-                 tile_rows: int = 0, name: str = "replica"):
+                 tile_rows: int = 0, name: str = "replica",
+                 retries: int = 3, backoff_s: float = 0.005,
+                 backoff_cap_s: float = 0.1):
         self.store = store
         self.targets = tuple(targets)
         self.tile_rows = int(tile_rows)
@@ -210,6 +405,10 @@ class PolicyReader:
         self.policy: Optional[SwapPolicy] = None
         self._dyn_cache = None
         self._hb_seen: Optional[int] = None    # heartbeat ns at last full poll
+        self.retries = int(retries)            # capped-backoff load attempts
+        self.backoff_s = float(backoff_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.read_errors = 0                   # degraded loads this replica saw
         self.poll()
 
     def poll(self) -> bool:
@@ -220,11 +419,24 @@ class PolicyReader:
         publish happened since the last full poll and the whole check is one
         ``stat()`` — no ``CURRENT`` read, no JSON load.  Stores without a
         heartbeat (pre-heartbeat layouts, manual edits) always take the full
-        path."""
+        path.
+
+        Never crashes the replica on store damage: a load hitting a pruned,
+        torn or corrupt file retries with capped exponential backoff
+        (re-reading CURRENT each attempt — the writer may repair it between
+        retries), then falls back to the newest *loadable* version, and as a
+        last resort keeps serving the already-adopted policy.  Every
+        degraded load increments ``repro_store_read_errors``."""
+        for f in chaos.fire("reader.poll", replica=self.name):
+            if f.kind == "delay_poll":
+                time.sleep(0.02 if f.arg is None else float(f.arg))
+            elif f.kind == "crash_replica":
+                raise chaos.InjectedFault(
+                    f"reader.poll: replica {self.name} killed")
         hb = self.store.heartbeat_ns()
         if hb is not None and hb == self._hb_seen:
             _POLL_FAST.inc(1, path="heartbeat")
-            self._set_staleness(0 if self.version >= hb else None)
+            self._set_staleness(0 if self.version == hb else None)
             return False
         _POLL_FAST.inc(1, path="full")
         v = self.store.current_version()
@@ -237,8 +449,9 @@ class PolicyReader:
             self._hb_seen = hb if caught_up else None
             self._set_staleness(None)
             return False
-        got = self.store.load_current()
-        if got is None:
+        got = self._load_degrading(v)
+        if got is None or got[0] == self.version:
+            self._set_staleness(None)
             return False
         self.version, self.policy = got
         self._dyn_cache = None
@@ -246,6 +459,27 @@ class PolicyReader:
         _ADOPTIONS.inc(1, replica=self.name)
         self._set_staleness(None)
         return True
+
+    def _load_degrading(self, v: Optional[int]):
+        """Load version ``v`` with retries + backoff, then fall back to the
+        newest loadable version.  Returns (version, policy) or None; never
+        raises (the replica keeps serving what it has)."""
+        for attempt in range(max(self.retries, 1)):
+            if v is None:
+                break
+            try:
+                return v, self.store.load(v)
+            except _READ_ERRS as e:
+                self.read_errors += 1
+                _READ_ERRORS.inc(1, error=type(e).__name__)
+                obs.instant("store_read_error", cat="store",
+                            replica=self.name, version=v,
+                            error=type(e).__name__, attempt=attempt)
+                if attempt + 1 < max(self.retries, 1):
+                    time.sleep(min(self.backoff_s * (2 ** attempt),
+                                   self.backoff_cap_s))
+                v = self.store.current_version()   # writer may have repaired
+        return self.store.load_newest_loadable()
 
     def _set_staleness(self, known: Optional[int]) -> None:
         _STALENESS.set(self.staleness() if known is None else known,

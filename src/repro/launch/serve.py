@@ -33,6 +33,13 @@ slot's cache region and spliced into the running batch at the next step
 boundary (zero recompiles; per-request tokens bit-identical to the
 wave-granular oracle under greedy decoding).
 
+``--chaos-plan PATH`` (with ``--fleet``) installs a ``fleet.chaos``
+``FaultPlan`` for the run: deterministic injected faults (torn publishes,
+poisoned telemetry, replica kills, stalls) exercise the guarded-rollout /
+quarantine / store-recovery paths end-to-end (docs/robustness.md).  The
+fleet controller runs with ``canary=True``: retune winners are holdout-
+canaried before promotion and regressed adoptions auto-roll back.
+
 Observability (``repro.obs``, see docs/observability.md): ``--metrics-port``
 serves live Prometheus ``/metrics`` (``--metrics-hold`` keeps it up after
 the run), ``--obs-dir`` writes a Chrome-trace timeline + metric snapshots
@@ -147,20 +154,31 @@ def _run_fleet(args, cfg):
     from repro.launch.mesh import make_fleet_mesh
     from repro.runtime import AdaptiveConfig, AdaptiveController, SwapPolicy
 
+    from repro.fleet import chaos
+
     n = args.fleet
     if len(jax.devices()) < n:
         raise SystemExit(
             f"--fleet {n}: only {len(jax.devices())} devices visible; on CPU "
             f"set XLA_FLAGS=--xla_force_host_platform_device_count={n}")
     mesh = make_fleet_mesh(n)
+    harness = None
+    if args.chaos_plan:
+        plan = chaos.FaultPlan.load(args.chaos_plan)
+        harness = chaos.install(plan)
+        print(f"[chaos] {plan.describe()}")
     # slots must divide over the replica axis: round the default up to a
     # multiple of n
     slots = args.slots or n * max(1, -(-4 // n))
     store = PolicyStore(args.policy_store)
+    # the fleet driver runs guarded rollout: retune winners are canaried on
+    # a ring-buffer holdout before promotion, and a regressed adoption
+    # auto-rolls CURRENT back to last-good (docs/robustness.md)
     controller = AdaptiveController(
         SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
         cfg=AdaptiveConfig(min_observe_steps=2, cooldown_steps=2,
-                           tile_rows=args.tile_rows), store=store,
+                           tile_rows=args.tile_rows, canary=True),
+        store=store,
         log_fn=lambda line: print(f"[fleet] {line}"))
     resumed = controller.resume_from_store()
     print(f"[fleet] mesh={mesh.shape} slots={slots} store={store.root} "
@@ -186,7 +204,13 @@ def _run_fleet(args, cfg):
         bat.submit(Request(rid, rng.integers(0, cfg.vocab, L),
                            max_new=int(rng.integers(1, args.new_tokens + 1))))
     t0 = time.time()
-    done = bat.run()
+    done = []
+    while True:                # supervise the drain: an injected replica
+        try:                   # kill restarts it (faults fire once per plan)
+            done.extend(bat.run())
+            break
+        except chaos.InjectedFault as e:
+            print(f"[chaos] survived injected crash ({e}); resuming drain")
     dt = time.time() - t0
     toks = sum(len(c.tokens) for c in done)
     print(f"[fleet] {bat.describe()}")
@@ -200,11 +224,21 @@ def _run_fleet(args, cfg):
     print("[fleet] replica staleness (versions behind CURRENT): "
           + " ".join(f"r{i}=v{r.version}+{s}" for i, (r, s)
                      in enumerate(zip(readers, stale))))
-    for r in readers:
-        r.poll()
+    for i, r in enumerate(readers):
+        try:
+            r.poll()
+        except chaos.InjectedFault as e:
+            print(f"[chaos] reader r{i} survived injected crash ({e}); "
+                  f"re-polling")
+            r.poll()
     print(f"[fleet] after poll: staleness="
           f"{[r.staleness() for r in readers]} (all replicas adopted "
           f"v{store.current_version()})")
+    if harness is not None:
+        print(f"[chaos] {harness.describe()}")
+        if controller.rollbacks:
+            print(f"[chaos] rollbacks: {controller.rollbacks}")
+        chaos.uninstall()
 
 
 def main():
@@ -241,6 +275,9 @@ def main():
                     help="--fleet synthetic request count")
     ap.add_argument("--policy-store", default="/tmp/repro_policy_store",
                     help="--fleet PolicyStore root directory")
+    ap.add_argument("--chaos-plan", default=None, metavar="PATH",
+                    help="--fleet: install a fleet.chaos FaultPlan JSON "
+                         "(fault-injection run; see docs/robustness.md)")
     ap.add_argument("--metrics-port", type=int, default=None, metavar="P",
                     help="serve Prometheus /metrics on this port for the "
                          "whole run (0 = ephemeral, printed at startup)")

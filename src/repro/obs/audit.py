@@ -12,7 +12,10 @@ store kept).
 
 The log is plain JSONL with O_APPEND single-writer semantics — the same
 single-writer guarantee the PolicyStore already enforces covers it, and a
-crash mid-write loses at most the final partial line (``read`` skips it).
+crash mid-write loses at most the final partial line (``read`` skips it,
+and the next writer resumes ``seq`` from the last *complete* event).
+Appends fsync before returning, so an acknowledged event survives a
+process kill (the same durability contract ``PolicyStore.publish`` makes).
 """
 from __future__ import annotations
 
@@ -66,6 +69,7 @@ class AuditLog:
             f.write(line)
             f.write("\n")
             f.flush()
+            os.fsync(f.fileno())
         return ev
 
     def _ends_with_newline(self) -> bool:

@@ -29,8 +29,16 @@ from repro.core.swapper import SwapConfig, all_configs, apply_swapper_dyn
 
 from .drift import DriftConfig, DriftDetector
 from .policy import NO_SWAP_TRIPLE, SwapPolicy, triple_of, triple_short
-from .telemetry import (Telemetry, base_target, is_tile_key, operand_summary,
-                        tile_key, tile_summary)
+from .telemetry import (Telemetry, TelemetryQuarantine, base_target,
+                        is_tile_key, operand_summary, tile_key, tile_summary)
+
+
+def _chaos():
+    """Lazy import of the fleet chaos harness (module-level would cycle:
+    fleet.store imports runtime.policy)."""
+    from repro.fleet import chaos
+
+    return chaos
 
 __all__ = ["AdaptiveConfig", "RetuneEvent", "TileRetuneEvent",
            "AdaptiveController", "all_triples", "tile_triples"]
@@ -50,6 +58,13 @@ _RETUNE_GAIN = _REG.gauge(
     "repro_retune_predicted_gain",
     "per-target predicted error reduction of the last re-tune "
     "(incumbent score - winner score, re-tune metric units)")
+_CANARY = _REG.counter(
+    "repro_canary_total",
+    "candidate policies canaried against the ring-buffer holdout, by outcome "
+    "(promoted / rejected)")
+_ROLLBACKS = _REG.counter(
+    "repro_rollbacks_total",
+    "post-adoption guard-band trips: CURRENT re-pointed to last-good")
 
 
 def all_triples(bits: int) -> np.ndarray:
@@ -128,6 +143,19 @@ class AdaptiveConfig:
     # drift_threshold accordingly, as with the fleet's 1/N shard dilution)
     tile_rows: int = 0
     tile_buffer_size: int = 512    # per-(target, tile) operand ring buffer
+    # guarded rollout (canary + auto-rollback; docs/robustness.md).  Off by
+    # default: single-host experiments keep the direct adopt-on-retune
+    # behavior; the fleet driver and chaos paths turn it on.
+    canary: bool = False           # publish winners as candidates, canary them
+    canary_holdout: int = 256      # newest ring-buffer elements held out
+    canary_margin: float = 0.0     # winner must beat incumbent by this frac
+    rollback_guard: float = 0.5    # post-adoption ew_mae regression fraction
+    rollback_min_steps: int = 2    # observed steps before the guard can fire
+    rollback_window: int = 32      # guard watch window (steps) per adoption
+    # telemetry admission control (always constructed; `quarantine=False`
+    # disables even the NaN/Inf + bounds checks)
+    quarantine: bool = True
+    quarantine_z: Optional[float] = None   # robust-z MAE outlier threshold
 
 
 @dataclasses.dataclass
@@ -139,12 +167,15 @@ class RetuneEvent:
     new: Optional[SwapConfig]
     old_score: float
     new_score: float
+    promoted: bool = True                   # False: canary rejected the winner
+    candidate_version: Optional[int] = None  # store version the attempt holds
 
     def describe(self) -> str:
         fmt = lambda c: "noswap" if c is None else c.short()
+        verdict = "" if self.promoted else " [canary REJECTED, kept incumbent]"
         return (f"retune[{self.target}] step={self.step} drift={self.drift:.3f} "
                 f"{fmt(self.old)} ({self.old_score:.2f}) -> "
-                f"{fmt(self.new)} ({self.new_score:.2f})")
+                f"{fmt(self.new)} ({self.new_score:.2f}){verdict}")
 
 
 @dataclasses.dataclass
@@ -195,6 +226,20 @@ class _RingBuffer:
         return (np.tile(self.a[:n], reps)[: len(self.a)],
                 np.tile(self.b[:n], reps)[: len(self.a)])
 
+    def recent(self, n: int):
+        """The ``n`` most recently written elements as fixed-shape (n,)
+        arrays (cyclically tiled when fewer were ever written) — the canary
+        holdout: the freshest slice of the live distribution, scored but
+        never what the full-buffer sweep optimized on alone."""
+        m = min(max(self.filled, 1), n)
+        idx = (self.pos - m + np.arange(m)) % len(self.a)
+        a, b = self.a[idx], self.b[idx]
+        if m < n:
+            reps = -(-n // m)
+            a = np.tile(a, reps)[:n]
+            b = np.tile(b, reps)[:n]
+        return a, b
+
 
 class AdaptiveController:
     """Owns the telemetry, drift detector, operand buffers and the policy."""
@@ -240,6 +285,16 @@ class AdaptiveController:
         # audit trail rides next to the store (obs.audit): store-less
         # controllers (unit tests, single-host experiments) skip it
         self.audit = obs.audit_for_store(store) if store is not None else None
+        # telemetry admission control (docs/robustness.md): NaN/Inf + bounds
+        # always when enabled; robust-z outliers only with quarantine_z set
+        self.quarantine = (TelemetryQuarantine(
+            self.mult.bits, z_threshold=self.cfg.quarantine_z)
+            if self.cfg.quarantine else None)
+        # post-adoption rollback guard state, one slot per promoted target:
+        # {target: dict(baseline, version, last_good, last_good_policy,
+        #               adopted_step, steps)}
+        self._guards: Dict[str, dict] = {}
+        self.rollbacks: List[dict] = []
 
     @property
     def tile_rows(self) -> int:
@@ -316,6 +371,14 @@ class AdaptiveController:
                            jnp.int32)
             _score_configs_tiled(self.mult, tz, tz, self.tile_sweep,
                                  self.cfg.metric).block_until_ready()
+        if self.cfg.canary:
+            # the canary's (2, 3)-triple holdout scoring shape — precompiled
+            # here so canaried retunes stay zero-recompile like everything
+            # else (tests pin scorer_cache_size across retunes)
+            hz = jnp.zeros(self.cfg.canary_holdout, jnp.int32)
+            _score_configs(self.mult, hz, hz,
+                           jnp.zeros((2, 3), jnp.int32),
+                           self.cfg.metric).block_until_ready()
 
     def scorer_cache_size(self) -> int:
         return _score_configs._cache_size()
@@ -328,6 +391,16 @@ class AdaptiveController:
         :meth:`retune_tiles`).  Returns the log lines emitted for this
         step."""
         mark = len(self.log)
+        faults = _chaos().fire("controller.observe", step=self.step)
+        if faults:
+            records = _chaos().poison_records(faults, records)
+        if self.quarantine is not None:
+            records, dropped = self.quarantine.filter(records)
+            for target, reason in dropped:
+                self._emit(f"quarantined {target} record ({reason})")
+                if self.audit is not None:
+                    self.audit.append("quarantine", step=self.step,
+                                      target=target, reason=reason)
         self.telemetry.update(records)
         for target, rec in records.items():
             if is_tile_key(target):
@@ -337,6 +410,9 @@ class AdaptiveController:
             if buf is not None:
                 buf.add(rec["a_smp"], rec["b_smp"])
         self.step += 1
+        # rollback guard BEFORE drift: a regressed adoption must roll back
+        # to last-good within one sweep, not race a fresh retune for it
+        self._check_guards()
 
         if self.step - self._last_retune_step > self.cfg.cooldown_steps:
             drifted = self.detector.check(self.telemetry.snapshot())
@@ -383,8 +459,18 @@ class AdaptiveController:
     # -- re-tuning -----------------------------------------------------
     def retune(self, target: str, drift: float = 0.0) -> RetuneEvent:
         """Incremental re-tune of one target over its live operand buffer:
-        one vmapped call scores NoSwap + all 4M configs; zero recompiles."""
+        one vmapped call scores NoSwap + all 4M configs; zero recompiles.
+
+        With ``cfg.canary`` the winner is NOT adopted directly: it is
+        published as a store *candidate*, scored head-to-head against the
+        incumbent on the holdout (the newest ``canary_holdout`` buffer
+        elements — one extra vmapped call of the precompiled scorer), and
+        only a confirmed predicted gain promotes it to CURRENT; a rejected
+        winner keeps the incumbent serving.  Every promotion arms the
+        post-adoption rollback guard (:meth:`_check_guards`)."""
         t0 = time.perf_counter()
+        _chaos().maybe_stall(_chaos().fire("controller.retune",
+                                           target=target), default=0.05)
         with obs.span("retune", cat="adapt", target=target, drift=drift):
             a, b = self.buffers[target].operands()
             scores = np.asarray(_score_configs(
@@ -396,31 +482,160 @@ class AdaptiveController:
                 (np.asarray(self.triples)
                  == np.asarray(triple_of(old))).all(1))[0][0])
             new = None if best == 0 else all_configs(self.mult.bits)[best - 1]
+            ev = RetuneEvent(self.step, target, drift, old, new,
+                             float(scores[old_idx]), float(scores[best]))
+            guarded = self.cfg.canary and best != old_idx
+            last_good_policy = self._policy_copy() if guarded else None
+            last_good = (self.store.current_version()
+                         if guarded and self.store is not None else None)
             self.policy.set_config(target, new)
+            if guarded:
+                if self.store is not None:
+                    ev.candidate_version = self.store.publish_candidate(
+                        self.policy)
+                ok, canary_scores = self._canary(target, old_idx, best)
+                if not ok:
+                    # keep the incumbent serving: revert, drop the candidate
+                    self.policy.set_config(target, old)
+                    if self.store is not None:
+                        self.store.reject_candidate(ev.candidate_version)
+                    ev.promoted = False
+                    _CANARY.inc(1, outcome="rejected")
+                else:
+                    _CANARY.inc(1, outcome="promoted")
             snap = self.telemetry.snapshot().get(target)
             if snap is not None and snap.get("bit_probs") is not None:
                 self.detector.rebase(target, snap["bit_probs"])
             self._last_retune_step = self.step
-            ev = RetuneEvent(self.step, target, drift, old, new,
-                             float(scores[old_idx]), float(scores[best]))
             self.retunes.append(ev)
             self._emit(ev.describe())
             version = None
-            if self.store is not None:
-                version = self.store.publish(self.policy)
+            if self.store is not None and ev.promoted:
+                if guarded:
+                    version = self.store.promote(ev.candidate_version)
+                else:
+                    version = self.store.publish(self.policy)
                 self._emit(f"published policy v{version}")
+            if guarded and ev.promoted:
+                self._arm_guard(target, version, last_good, last_good_policy,
+                                ev)
         _RETUNES.inc(1, kind="scalar")
         _RETUNE_WALL.observe(time.perf_counter() - t0)
         _RETUNE_GAIN.set(ev.old_score - ev.new_score, target=target)
         if self.audit is not None:
+            kind = "retune" if ev.promoted else "canary_rejected"
+            extra = ({} if ev.promoted
+                     else dict(canary=canary_scores))
             self.audit.append(
-                "retune", step=self.step, target=target, drift=float(drift),
+                kind, step=self.step, target=target, drift=float(drift),
                 old="noswap" if old is None else old.short(),
                 new="noswap" if new is None else new.short(),
                 old_score=ev.old_score, new_score=ev.new_score,
                 predicted_gain=ev.old_score - ev.new_score,
-                store_version=version)
+                store_version=version,
+                candidate_version=ev.candidate_version, **extra)
         return ev
+
+    # -- guarded rollout (canary + auto-rollback) ----------------------
+    def _policy_copy(self) -> SwapPolicy:
+        """Deep, bit-identical snapshot of the live policy via the same JSON
+        round-trip the store uses — a rollback restores *exactly* what the
+        replicas were serving before the regressed adoption."""
+        return SwapPolicy.from_json(self.policy.to_json())
+
+    def _canary(self, target: str, old_idx: int, best: int):
+        """Score incumbent vs winner head-to-head on the canary holdout (the
+        ``canary_holdout`` newest ring-buffer elements) with one call of the
+        precompiled scorer (shape warmed in :meth:`warmup` — zero
+        recompiles).  Confirms when the winner's holdout score beats the
+        incumbent's by at least ``canary_margin`` (fraction)."""
+        a, b = self.buffers[target].recent(self.cfg.canary_holdout)
+        pair = jnp.stack([self.triples[old_idx], self.triples[best]])
+        s = np.asarray(_score_configs(self.mult, jnp.asarray(a),
+                                      jnp.asarray(b), pair, self.cfg.metric))
+        incumbent, winner = float(s[0]), float(s[1])
+        ok = winner <= incumbent * (1.0 - self.cfg.canary_margin) + 1e-12
+        self._emit(f"canary[{target}] incumbent={incumbent:.3f} "
+                   f"winner={winner:.3f} -> "
+                   f"{'CONFIRMED' if ok else 'REJECTED'}")
+        obs.instant("canary", cat="adapt", target=target,
+                    incumbent=incumbent, winner=winner, confirmed=ok)
+        return ok, dict(incumbent=incumbent, winner=winner,
+                        margin=self.cfg.canary_margin)
+
+    def _arm_guard(self, target: str, version: Optional[int],
+                   last_good: Optional[int],
+                   last_good_policy: SwapPolicy, ev: RetuneEvent) -> None:
+        """Watch a just-promoted adoption: if the target's live ``ew_mae``
+        regresses past ``baseline * (1 + rollback_guard)`` within
+        ``rollback_window`` observed steps, :meth:`_rollback` fires."""
+        snap = self.telemetry.snapshot().get(target) or {}
+        base = snap.get("ew_mae")
+        self._guards[target] = dict(
+            baseline=float(base) if base is not None else float(ev.new_score),
+            version=version, last_good=last_good,
+            last_good_policy=last_good_policy,
+            adopted_step=self.step, steps=0)
+
+    def _check_guards(self) -> None:
+        """Post-adoption rollback guard sweep (every observed step, before
+        drift): disarm guards that survive their window, roll back targets
+        whose telemetry MAE regressed past the guard band."""
+        if not self._guards:
+            return
+        snaps = self.telemetry.snapshot()
+        for target in list(self._guards):
+            g = self._guards[target]
+            g["steps"] += 1
+            if g["steps"] > self.cfg.rollback_window:
+                del self._guards[target]          # adoption survived
+                continue
+            snap = snaps.get(target)
+            if (g["steps"] < self.cfg.rollback_min_steps or snap is None
+                    or snap.get("ew_mae") is None):
+                continue
+            band = g["baseline"] * (1.0 + self.cfg.rollback_guard)
+            observed = float(snap["ew_mae"])
+            if observed > band:
+                self._rollback(target, g, observed=observed, band=band)
+
+    def _rollback(self, target: str, g: dict, observed: float,
+                  band: float) -> None:
+        """Re-point serving to last-good: restore the pre-adoption policy
+        snapshot bit-identically, re-point the store's CURRENT at the
+        last-good version (readers adopt on their next poll), rebase the
+        drift reference and start a cooldown so the bad window's telemetry
+        can't immediately re-trigger the same retune."""
+        with obs.span("rollback", cat="adapt", target=target):
+            self.policy = g["last_good_policy"]
+            self._dyn_cache = None
+            version = None
+            if self.store is not None and g["last_good"] is not None:
+                version = self.store.rollback(g["last_good"])
+            snap = self.telemetry.snapshot().get(target)
+            if snap is not None and snap.get("bit_probs") is not None:
+                self.detector.rebase(target, snap["bit_probs"])
+            self._last_retune_step = self.step
+            del self._guards[target]
+            info = dict(step=self.step, target=target,
+                        from_version=g["version"],
+                        to_version=(version if version is not None
+                                    else g["last_good"]),
+                        baseline=g["baseline"], observed=observed)
+            self.rollbacks.append(info)
+            _ROLLBACKS.inc(1)
+            self._emit(
+                f"ROLLBACK[{target}] step={self.step} ew_mae={observed:.3f} "
+                f"> band={band:.3f} -> restored "
+                f"v{info['to_version']}" if info["to_version"] is not None
+                else f"ROLLBACK[{target}] step={self.step} "
+                     f"ew_mae={observed:.3f} > band={band:.3f}")
+        if self.audit is not None:
+            self.audit.append(
+                "rollback", trigger="rollback", step=self.step, target=target,
+                observed_mae=observed, baseline_mae=g["baseline"],
+                guard=self.cfg.rollback_guard, from_version=g["version"],
+                store_version=version)
 
     def retune_tiles(self, target: str, drift: float = 0.0) -> TileRetuneEvent:
         """Per-row-tile re-tune of one target: ONE vmapped call scores the

@@ -14,15 +14,25 @@ Two halves:
   occupancy probabilities (the drift signal) plus an exact cumulative
   :class:`~repro.core.metrics.ErrorStats` window recombined from the limb
   sums, per target.
+
+* **Admission control** (:class:`TelemetryQuarantine`) — sanitization in
+  front of the accumulators: NaN/Inf records, records violating the
+  summary's structural invariants (counts bounded by the sample size,
+  operand codes bounded by the multiplier width), and — optionally —
+  robust-z step-MAE outliers are quarantined BEFORE they can reach ring
+  buffers or drift scores, so one poisoned shard cannot trigger (or skew)
+  a fleet retune.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.metrics import ErrorStats, abs_err
 from repro.core.multipliers import AxMult
 from repro.core.swapper import apply_swapper_dyn
@@ -45,6 +55,7 @@ __all__ = [
     "TargetTelemetry",
     "TargetTileTelemetry",
     "Telemetry",
+    "TelemetryQuarantine",
 ]
 
 TELEMETRY_SAMPLE = 2048   # elements of each operand entering the bit/error stats
@@ -376,3 +387,113 @@ class Telemetry:
             gm = 0 if tt.bit_probs is None else tt.bit_probs.shape[0]
             parts.append(f"{t}: tiles={gm} steps={tt.n_steps}")
         return "telemetry " + " | ".join(parts) if parts else "telemetry <empty>"
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+_QUARANTINED = obs.default_registry().counter(
+    "repro_telemetry_quarantined_total",
+    "telemetry records quarantined before the accumulators, by target and "
+    "reason (nonfinite / bounds / outlier)")
+
+
+class TelemetryQuarantine:
+    """Record sanitization in front of the accumulators and ring buffers.
+
+    Three independent checks, cheapest first:
+
+    1. **nonfinite** — any NaN/Inf in a float field (corrupt shard math,
+       torn transfers);
+    2. **bounds** — structural invariants every honest ``operand_summary``
+       / ``tile_summary`` record satisfies by construction: per-bit
+       occupancy counts cannot exceed the total sample count, error-limb
+       sums are bounded by ``n * 0xFFFF``, the nonzero-error count by
+       ``n``, and exported operand codes by the multiplier's ``2**bits``
+       magnitude range;
+    3. **outlier** (``z_threshold`` set) — robust z-score of the record's
+       step MAE against the trailing per-target history (median/MAD):
+       finite, in-bounds, but absurd records — the "one shard went insane"
+       case.  Quarantined records are NOT appended to the history, so a
+       poison burst cannot drag the baseline toward itself.
+
+    Records with ``n == 0`` pass untouched: the fused decode's gated-off
+    slots legitimately emit all-zero records, and vetoing them would change
+    accumulator trajectories for honest traffic.
+    """
+
+    REASONS = ("nonfinite", "bounds", "outlier")
+
+    def __init__(self, bits: int, z_threshold: Optional[float] = None,
+                 history: int = 64, min_history: int = 8):
+        self.bits = int(bits)
+        self.z_threshold = z_threshold
+        self.history = int(history)
+        self.min_history = int(min_history)
+        self._mae_hist: Dict[str, collections.deque] = {}
+        self.quarantined = 0
+        self.by_reason: Dict[str, int] = {}
+
+    # -- checks --------------------------------------------------------
+    def check(self, target: str, rec: Dict[str, np.ndarray]) -> Optional[str]:
+        """The quarantine reason for this record, or None when admissible."""
+        for v in rec.values():
+            v = np.asarray(v)
+            if np.issubdtype(v.dtype, np.floating) and not bool(
+                    np.all(np.isfinite(v))):
+                return "nonfinite"
+        tile = is_tile_key(target)
+        n = float(np.sum(np.asarray(rec["tile_n" if tile else "n"],
+                                    np.float64)))
+        if n <= 0:
+            return None                      # gated-off zero record: vacuous
+        lim = float(2 ** self.bits)
+        for k in ("bits_a", "bits_b") if not tile else ("tile_bits_a",):
+            if k in rec:
+                counts = np.asarray(rec[k], np.float64)
+                counts = counts.reshape(-1, counts.shape[-1]).sum(axis=0)
+                if float(counts.max(initial=0.0)) > n + 0.5:
+                    return "bounds"
+        for k in ("a_smp", "b_smp", "tile_a_smp", "tile_b_smp"):
+            if k in rec and np.abs(
+                    np.asarray(rec[k], np.float64)).max(initial=0.0) > lim:
+                return "bounds"
+        if not tile:
+            lo = float(np.sum(np.asarray(rec["err_lo"], np.float64)))
+            hi = float(np.sum(np.asarray(rec["err_hi"], np.float64)))
+            cnt = float(np.sum(np.asarray(rec["err_cnt"], np.float64)))
+            if lo > n * 0xFFFF or hi > n * 0xFFFF or cnt > n + 0.5:
+                return "bounds"
+            if self.z_threshold is not None:
+                mae = (lo + hi * 65536.0) / n
+                hist = self._mae_hist.setdefault(
+                    target, collections.deque(maxlen=self.history))
+                if len(hist) >= self.min_history:
+                    arr = np.asarray(hist, np.float64)
+                    med = float(np.median(arr))
+                    mad = float(np.median(np.abs(arr - med)))
+                    # the 0.05*med floor keeps a near-zero-MAD history from
+                    # flagging ordinary drift as an outlier (scale-relative)
+                    z = abs(mae - med) / (1.4826 * mad + 0.05 * med + 1e-9)
+                    if z > self.z_threshold:
+                        return "outlier"     # and keep it OUT of the history
+                hist.append(mae)
+        return None
+
+    def filter(self, records: Dict[str, Dict[str, np.ndarray]]
+               ) -> Tuple[Dict[str, Dict[str, np.ndarray]],
+                          List[Tuple[str, str]]]:
+        """(admitted records, [(target, reason) dropped]) — the controller
+        feeds only the admitted half to accumulators/buffers/drift."""
+        admitted, dropped = {}, []
+        for target, rec in records.items():
+            reason = self.check(target, rec)
+            if reason is None:
+                admitted[target] = rec
+            else:
+                dropped.append((target, reason))
+                self.quarantined += 1
+                self.by_reason[reason] = self.by_reason.get(reason, 0) + 1
+                _QUARANTINED.inc(1, target=target, reason=reason)
+        return admitted, dropped

@@ -1,0 +1,510 @@
+"""Self-healing adaptation loop: chaos harness determinism, crash-atomic
+store publishes, reader degradation (torn/corrupt/pruned CURRENT), audit-log
+torn-tail recovery, telemetry quarantine, canaried rollout with
+auto-rollback, and scheduler deadlines / load-shedding — the failure-mode
+catalogue of docs/robustness.md, each fault injected deterministically via
+``fleet.chaos``.
+
+Runs in CI's chaos lane (``-m chaos``) with the unit lane excluding it.
+"""
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.runtime as R
+from repro.configs.base import AxPolicy
+from repro.fleet import (BatcherConfig, ContinuousBatcher, PolicyReader,
+                         PolicyStore, Request, chaos)
+from repro.obs.audit import AuditLog
+from repro.runtime.telemetry import TelemetryQuarantine
+
+pytestmark = pytest.mark.chaos
+
+
+def _policy(cfg=None):
+    return R.SwapPolicy("mul8u_trunc0_4", configs={"*": cfg})
+
+
+# ---------------------------------------------------------------------------
+# chaos harness
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_seeded_deterministic_and_json_roundtrip(tmp_path):
+    a, b = chaos.FaultPlan.seeded(42), chaos.FaultPlan.seeded(42)
+    assert a.describe() == b.describe() and len(a.faults) == 6
+    assert chaos.FaultPlan.seeded(43).describe() != a.describe()
+    path = str(tmp_path / "plan.json")
+    a.save(path)
+    c = chaos.FaultPlan.load(path)
+    assert c.describe() == a.describe() and c.seed == 42
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        chaos.FaultSpec("no.such.site", "torn_current")
+    with pytest.raises(ValueError):
+        chaos.FaultSpec("store.publish", "poison_nan")  # wrong site
+
+
+def test_harness_armed_but_idle_fires_nothing():
+    # fire() with no harness installed is a free no-op
+    assert chaos.fire("store.publish") == []
+    plan = chaos.FaultPlan([chaos.FaultSpec("sched.step", "stall_step",
+                                            at=10 ** 6)])
+    with chaos.active(plan) as h:
+        for _ in range(5):
+            assert chaos.fire("store.publish") == []
+        assert h.visits["store.publish"] == 5 and h.fired == []
+    assert chaos.current() is None
+
+
+def test_harness_fires_at_visit_and_counts():
+    plan = chaos.FaultPlan([
+        chaos.FaultSpec("reader.poll", "delay_poll", at=1, arg=0.0),
+        chaos.FaultSpec("reader.poll", "delay_poll", at=2, arg=0.0),
+    ])
+    with chaos.active(plan) as h:
+        assert chaos.fire("reader.poll") == []
+        assert [f.kind for f in chaos.fire("reader.poll")] == ["delay_poll"]
+        assert len(chaos.fire("reader.poll")) == 1
+        assert h.fired_count("delay_poll") == 2
+
+
+# ---------------------------------------------------------------------------
+# store hardening: crash-atomic publish, torn/corrupt/pruned degradation
+# ---------------------------------------------------------------------------
+
+def test_publish_kill_mid_write_is_crash_atomic(tmp_path):
+    store = PolicyStore(str(tmp_path))
+    store.publish(_policy(C.SwapConfig("A", 3, 0)))
+    plan = chaos.FaultPlan([chaos.FaultSpec("store.publish",
+                                            "kill_mid_write", at=0)])
+    with chaos.active(plan):
+        with pytest.raises(chaos.InjectedFault):
+            store.publish(_policy(C.SwapConfig("B", 5, 1)))
+    # nothing committed: previous version still current, torn temp on disk
+    assert store.current_version() == 1 and store.versions() == [1]
+    assert any(fn.endswith(".tmp") for fn in os.listdir(str(tmp_path)))
+    # recovery sweep at open removes the stale orphan; publishing resumes
+    store2 = PolicyStore(str(tmp_path), recover_stale_s=0.0)
+    assert not any(fn.endswith(".tmp") for fn in os.listdir(str(tmp_path)))
+    v = store2.publish(_policy(C.SwapConfig("B", 5, 1)))
+    assert v == 2 and store2.current_version() == 2
+
+
+def test_publish_torn_current_degrades_to_newest(tmp_path):
+    store = PolicyStore(str(tmp_path))
+    store.publish(_policy(C.SwapConfig("A", 3, 0)))
+    reader = PolicyReader(store, ("mlp",), backoff_s=0.0)
+    assert reader.version == 1
+    plan = chaos.FaultPlan([chaos.FaultSpec("store.publish",
+                                            "torn_current", at=0)])
+    with chaos.active(plan):
+        with pytest.raises(chaos.InjectedFault):
+            store.publish(_policy(C.SwapConfig("B", 5, 1)))
+    # CURRENT is garbage but v2 was committed: current_version falls back
+    # to the newest on-disk version and the replica adopts it, no crash
+    assert store.current_version() == 2
+    assert reader.poll() is True and reader.version == 2
+    # the writer's next publish allocates past the damage
+    store2 = PolicyStore(str(tmp_path))
+    assert store2.publish(_policy(C.SwapConfig("A", 1, 1))) == 3
+
+
+def test_corrupt_policy_reader_falls_back_loadable(tmp_path):
+    store = PolicyStore(str(tmp_path))
+    store.publish(_policy(C.SwapConfig("A", 3, 0)))
+    plan = chaos.FaultPlan([chaos.FaultSpec("store.after_publish",
+                                            "corrupt_policy", at=0)])
+    with chaos.active(plan):
+        store.publish(_policy(C.SwapConfig("B", 5, 1)))   # v2, then corrupted
+    reader = PolicyReader(store, ("mlp",), retries=2, backoff_s=0.0)
+    # CURRENT says v2 but v2 is garbage JSON: the replica retries, then
+    # serves the newest *loadable* version instead of crashing
+    assert reader.version == 1 and reader.read_errors >= 1
+    assert reader.policy.lookup("mlp") == C.SwapConfig("A", 3, 0)
+
+
+def test_reader_survives_pruned_current(tmp_path):
+    # satellite: CURRENT pointing at a pruned version must degrade, not raise
+    store = PolicyStore(str(tmp_path))
+    for cfg in (C.SwapConfig("A", 3, 0), C.SwapConfig("B", 5, 1),
+                C.SwapConfig("A", 1, 1)):
+        store.publish(_policy(cfg))
+    os.remove(store._path(3))                  # prune race: file gone,
+    reader = PolicyReader(store, ("mlp",),     # CURRENT still says 3
+                          retries=2, backoff_s=0.0)
+    assert reader.version == 2 and reader.read_errors >= 1
+    assert reader.policy.lookup("mlp") == C.SwapConfig("B", 5, 1)
+
+
+def test_candidate_promote_reject_lifecycle(tmp_path):
+    store = PolicyStore(str(tmp_path))
+    store.publish(_policy(C.SwapConfig("A", 3, 0)))
+    reader = PolicyReader(store, ("mlp",))
+    cand = store.publish_candidate(_policy(C.SwapConfig("B", 5, 1)))
+    assert cand == 2 and store.candidate_version() == 2
+    # candidates are invisible to readers and version listings
+    assert store.versions() == [1]
+    assert reader.poll() is False and reader.version == 1
+    assert store.promote(cand) == 2
+    assert reader.poll() is True and reader.version == 2
+    # a rejected candidate's number is never reused for a different policy
+    c2 = store.publish_candidate(_policy(C.SwapConfig("A", 7, 0)))
+    store.reject_candidate(c2)
+    assert store.candidate_version() is None
+    assert store.publish(_policy(C.SwapConfig("A", 1, 0))) == c2 + 1
+
+
+def test_rollback_repoints_current_and_allocates_past(tmp_path):
+    store = PolicyStore(str(tmp_path))
+    store.publish(_policy(C.SwapConfig("A", 3, 0)))
+    store.publish(_policy(C.SwapConfig("B", 5, 1)))
+    reader = PolicyReader(store, ("mlp",))
+    assert reader.version == 2
+    assert store.rollback(1) == 1
+    assert store.current_version() == 1
+    # the backwards heartbeat is adopted (equality compare, not order)
+    assert reader.poll() is True and reader.version == 1
+    assert reader.policy.lookup("mlp") == C.SwapConfig("A", 3, 0)
+    # immutable files survive; the next publish allocates past them
+    assert store.versions() == [1, 2]
+    assert store.publish(_policy(C.SwapConfig("A", 1, 1))) == 3
+    with pytest.raises(FileNotFoundError):
+        store.rollback(99)
+
+
+# ---------------------------------------------------------------------------
+# audit log: fsync'd appends, torn-tail seq resume
+# ---------------------------------------------------------------------------
+
+def test_audit_torn_final_line_resumes_seq(tmp_path):
+    path = str(tmp_path / "audit.jsonl")
+    log = AuditLog(path)
+    for i in range(3):
+        log.append("retune", idx=i)
+    with open(path, "rb") as f:
+        body = f.read()
+    with open(path, "wb") as f:               # injected mid-append kill:
+        f.write(body[:-7])                    # torn final line, no newline
+    log2 = AuditLog(path)
+    events = log2.read()
+    assert [e["seq"] for e in events] == [0, 1]   # torn event skipped
+    ev = log2.append("retune", idx=99)
+    assert ev["seq"] == 2                     # resumes after last COMPLETE
+    events = log2.read()
+    assert [e["seq"] for e in events] == [0, 1, 2]
+    assert events[-1]["idx"] == 99            # not glued onto the wreckage
+
+
+# ---------------------------------------------------------------------------
+# telemetry quarantine
+# ---------------------------------------------------------------------------
+
+def _scalar_record(n=128, bits=8):
+    rng = np.random.default_rng(0)
+    return {
+        "bits_a": np.full((1, bits), n / 2, np.float32),
+        "bits_b": np.full((1, bits), n / 3, np.float32),
+        "neg_a": np.zeros(1, np.float32), "neg_b": np.zeros(1, np.float32),
+        "n": np.asarray([n], np.int32),
+        "err_lo": np.asarray([n * 10], np.uint32),
+        "err_hi": np.zeros(1, np.uint32),
+        "err_max": np.asarray([40], np.uint32),
+        "err_cnt": np.asarray([n // 2], np.uint32),
+        "a_smp": rng.integers(0, 2 ** bits, (1, 64)).astype(np.int32),
+        "b_smp": rng.integers(0, 2 ** bits, (1, 64)).astype(np.int32),
+    }
+
+
+def test_quarantine_nonfinite_bounds_and_zero_records():
+    q = TelemetryQuarantine(bits=8)
+    assert q.check("t", _scalar_record()) is None
+    nan = _scalar_record()
+    nan["bits_a"] = np.full_like(nan["bits_a"], np.nan)
+    assert q.check("t", nan) == "nonfinite"
+    inf = _scalar_record()
+    inf["neg_b"] = np.full_like(inf["neg_b"], np.inf)
+    assert q.check("t", inf) == "nonfinite"
+    big = _scalar_record()
+    big["bits_a"] = big["bits_a"] * 1000      # counts >> sample size
+    assert q.check("t", big) == "bounds"
+    wild = _scalar_record()
+    wild["a_smp"] = wild["a_smp"] * 10 ** 6   # codes past 2**bits
+    assert q.check("t", wild) == "bounds"
+    limb = _scalar_record()
+    limb["err_lo"] = np.asarray([2 ** 31], np.uint32)  # > n * 0xFFFF
+    assert q.check("t", limb) == "bounds"
+    # gated-off all-zero records pass untouched (fused decode emits them)
+    zero = {k: np.zeros_like(v) for k, v in _scalar_record().items()}
+    assert q.check("t", zero) is None
+
+
+def test_quarantine_robust_z_outlier_keeps_history_clean():
+    q = TelemetryQuarantine(bits=8, z_threshold=8.0, min_history=4)
+    for _ in range(6):
+        assert q.check("t", _scalar_record()) is None
+    hot = _scalar_record()
+    hot["err_lo"] = np.asarray([128 * 5000], np.uint32)   # ~500x the MAE
+    assert q.check("t", hot) == "outlier"
+    # the outlier never entered the history: the next honest record passes
+    assert q.check("t", _scalar_record()) is None
+    admitted, dropped = q.filter({"t": hot})
+    assert admitted == {} and dropped == [("t", "outlier")]
+    assert q.quarantined == 1 and q.by_reason["outlier"] == 1
+
+
+def _make_controller(start_cfg, store=None, **kw):
+    policy = _policy(start_cfg)
+    cfg = dict(decay=0.4, drift_threshold=0.05, min_observe_steps=2,
+               cooldown_steps=2, buffer_size=1024)
+    cfg.update(kw)
+    ctrl = R.AdaptiveController(policy, targets=("stream",),
+                                cfg=R.AdaptiveConfig(**cfg), store=store)
+    ctrl.warmup()
+    return ctrl
+
+
+def test_poisoned_telemetry_quarantined_no_retune():
+    """NaN-poisoned records must neither reach the accumulators nor fire a
+    retune — the tentpole's 'one poisoned shard cannot retune the fleet'."""
+    rng = np.random.default_rng(3)
+    ctrl = _make_controller(C.SwapConfig("A", 3, 0))
+    plan = chaos.FaultPlan(
+        [chaos.FaultSpec("controller.observe", "poison_nan", at=k)
+         for k in range(4, 10)])
+    with chaos.active(plan) as h:
+        for _ in range(12):
+            ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                                  rng.integers(0, 256, 2048))
+        assert h.fired_count("poison_nan") == 6
+    assert ctrl.quarantine.by_reason.get("nonfinite", 0) >= 6
+    assert ctrl.retunes == []                  # poison never looked like drift
+    snap = ctrl.telemetry.snapshot()["stream"]
+    assert np.isfinite(snap["bit_probs"]).all() and np.isfinite(snap["ew_mae"])
+
+
+# ---------------------------------------------------------------------------
+# canaried rollout + auto-rollback
+# ---------------------------------------------------------------------------
+
+def test_canary_rejection_keeps_incumbent(tmp_path):
+    """canary_margin=1.0 demands an impossible holdout win: the retune's
+    winner must be rejected, the incumbent kept, the store untouched."""
+    rng = np.random.default_rng(4)
+    store = PolicyStore(str(tmp_path))
+    ctrl = _make_controller(None, store=store, canary=True, canary_margin=1.0,
+                            min_observe_steps=1, cooldown_steps=0)
+    ctrl.resume_from_store()                   # publishes v1
+    for _ in range(3):
+        ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                              rng.integers(0, 256, 2048))
+    cache = ctrl.scorer_cache_size()
+    ev = ctrl.retune("stream")
+    assert ev.promoted is False and ev.candidate_version == 2
+    assert ctrl.policy.lookup("stream") is None          # incumbent kept
+    assert store.current_version() == 1                  # CURRENT untouched
+    assert store.candidate_version() is None             # candidate rejected
+    assert ctrl.scorer_cache_size() == cache             # zero recompiles
+    kinds = [e["kind"] for e in ctrl.audit.read()]
+    assert "canary_rejected" in kinds
+
+
+def test_canary_promotion_arms_then_disarms_guard(tmp_path):
+    rng = np.random.default_rng(5)
+    store = PolicyStore(str(tmp_path))
+    ctrl = _make_controller(None, store=store, canary=True,
+                            min_observe_steps=1, cooldown_steps=0,
+                            rollback_min_steps=1, rollback_window=4)
+    ctrl.resume_from_store()
+    for _ in range(3):
+        ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                              rng.integers(0, 256, 2048))
+    cache = ctrl.scorer_cache_size()
+    ev = ctrl.retune("stream")
+    assert ev.promoted is True and store.current_version() == 2
+    assert "stream" in ctrl._guards            # guard armed on promotion
+    assert ctrl.scorer_cache_size() == cache   # canary scoring precompiled
+    for _ in range(6):                         # same regime: no regression
+        ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                              rng.integers(0, 256, 2048))
+    assert ctrl._guards == {} and ctrl.rollbacks == []   # survived the window
+
+
+def test_auto_rollback_restores_last_good_bit_identically(tmp_path):
+    """Post-adoption regression past the guard band re-points CURRENT to
+    last-good and restores the pre-adoption policy byte-for-byte."""
+    rng = np.random.default_rng(6)
+    store = PolicyStore(str(tmp_path))
+    ctrl = _make_controller(None, store=store, canary=True,
+                            drift_threshold=10.0,      # guard, not drift,
+                            min_observe_steps=1,       # must do the healing
+                            cooldown_steps=0, rollback_guard=0.5,
+                            rollback_min_steps=2, rollback_window=32)
+    ctrl.resume_from_store()
+    for _ in range(4):                         # low-error regime: baseline
+        ctrl.observe_operands("stream", rng.integers(0, 64, 2048),
+                              rng.integers(0, 64, 2048))
+    ev = ctrl.retune("stream")
+    assert ev.promoted is True and store.current_version() == 2
+    expected = R.SwapPolicy.from_json(store.load(1).to_json())
+    for _ in range(12):                        # regressed regime: ew_mae blows
+        ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                              rng.integers(128, 256, 2048))
+        if ctrl.rollbacks:
+            break
+    assert len(ctrl.rollbacks) == 1
+    rb = ctrl.rollbacks[0]
+    assert rb["to_version"] == 1 and rb["observed"] > rb["baseline"] * 1.5
+    assert store.current_version() == 1                  # CURRENT re-pointed
+    assert ctrl.policy.configs_equal(expected)           # bit-identical
+    assert "stream" not in ctrl._guards
+    audits = [e for e in ctrl.audit.read() if e["kind"] == "rollback"]
+    assert len(audits) == 1 and audits[0]["trigger"] == "rollback"
+    assert audits[0]["store_version"] == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler: deadlines, load-shedding, armed-but-idle bit-identity
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _tiny_model():
+    import repro.configs as CFG
+    from repro.models import init_params
+
+    cfg = CFG.reduced(CFG.ARCHS["qwen2-72b"])
+    cfg = dataclasses.replace(cfg, n_layers=2, ax=AxPolicy(backend="mxu"))
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _requests(cfg, n, rng, deadline_s=None):
+    return [Request(rid, rng.integers(0, cfg.vocab, 6), max_new=3,
+                    deadline_s=deadline_s) for rid in range(n)]
+
+
+def test_scheduler_sheds_past_bounded_queue():
+    cfg, params = _tiny_model()
+    bat = ContinuousBatcher(
+        params, cfg, BatcherConfig(n_slots=2, prompt_buckets=(8,),
+                                   new_token_bucket=4, max_queue=2))
+    rng = np.random.default_rng(0)
+    accepted = [bat.submit(r) for r in _requests(cfg, 5, rng)]
+    assert accepted == [True, True, False, False, False]
+    assert bat.stats["shed"] == 3 and bat.pending() == 2
+    done = bat.run()
+    assert sorted(c.rid for c in done) == [0, 1]
+    assert all(c.status == "ok" for c in done)
+
+
+def test_scheduler_deadline_times_out_queued_requests():
+    cfg, params = _tiny_model()
+    bat = ContinuousBatcher(
+        params, cfg, BatcherConfig(n_slots=2, prompt_buckets=(8,),
+                                   new_token_bucket=4))
+    rng = np.random.default_rng(1)
+    for r in _requests(cfg, 2, rng):
+        bat.submit(r)                          # no deadline: must complete
+    expired = Request(7, rng.integers(0, cfg.vocab, 6), max_new=3,
+                      deadline_s=0.0)          # lapses before any wave
+    bat.submit(expired)
+    done = bat.run()
+    by_rid = {c.rid: c for c in done}
+    assert by_rid[7].status == "timeout" and len(by_rid[7].tokens) == 0
+    assert all(by_rid[r].status == "ok" and len(by_rid[r].tokens) == 3
+               for r in (0, 1))
+    assert bat.stats["timeouts"] == 1
+
+
+def test_token_granular_deadline_and_stall_under_chaos():
+    """An injected per-step stall plus zero-deadline requests: timeouts are
+    reported, the drain completes, the replica never crashes."""
+    cfg, params = _tiny_model()
+    bat = ContinuousBatcher(
+        params, cfg, BatcherConfig(n_slots=2, prompt_buckets=(8,),
+                                   new_token_bucket=4, token_granular=True))
+    rng = np.random.default_rng(2)
+    for r in _requests(cfg, 3, rng):
+        bat.submit(r)
+    bat.submit(Request(9, rng.integers(0, cfg.vocab, 6), max_new=3,
+                       deadline_s=0.0))
+    plan = chaos.FaultPlan([chaos.FaultSpec("sched.step", "stall_step",
+                                            at=1, arg=0.01)])
+    with chaos.active(plan) as h:
+        done = bat.run()
+    assert h.fired_count("stall_step") == 1
+    by_rid = {c.rid: c for c in done}
+    assert by_rid[9].status == "timeout"
+    assert all(by_rid[r].status == "ok" for r in (0, 1, 2))
+    assert bat.stats["timeouts"] >= 1
+    assert bat.stats["decode_retraces_post_warmup"] == 0
+
+
+def test_armed_idle_token_serving_bit_identical_to_wave():
+    """Acceptance: an installed-but-never-firing harness leaves token-
+    granular serving bit-identical to the wave oracle, zero retraces."""
+    cfg, params = _tiny_model()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(3, 8)))
+               for _ in range(5)]
+    budgets = [int(rng.integers(1, 4)) for _ in range(5)]
+
+    def serve(token_granular, armed):
+        bat = ContinuousBatcher(
+            params, cfg, BatcherConfig(n_slots=2, prompt_buckets=(8,),
+                                       new_token_bucket=4,
+                                       token_granular=token_granular))
+        for rid, (p, m) in enumerate(zip(prompts, budgets)):
+            bat.submit(Request(rid, p, max_new=m))
+        if armed:
+            idle = chaos.FaultPlan([chaos.FaultSpec(
+                "sched.step", "crash_replica", at=10 ** 6)])
+            with chaos.active(idle) as h:
+                out = bat.run()
+            assert h.fired == [] and h.visits.get("sched.step", 0) > 0
+        else:
+            out = bat.run()
+        return {c.rid: np.asarray(c.tokens) for c in out}, bat
+
+    oracle, _ = serve(token_granular=False, armed=False)
+    got, bat = serve(token_granular=True, armed=True)
+    assert set(oracle) == set(got)
+    for rid in oracle:
+        assert np.array_equal(oracle[rid], got[rid]), rid
+    assert bat.stats["decode_retraces_post_warmup"] == 0
+
+
+def test_replica_crash_supervision_resumes_drain():
+    """An injected mid-drain replica kill is caught by the supervisor
+    pattern (launch/serve does the same) and the drain resumes: every
+    non-expired request still completes exactly once."""
+    cfg, params = _tiny_model()
+    bat = ContinuousBatcher(
+        params, cfg, BatcherConfig(n_slots=2, prompt_buckets=(8,),
+                                   new_token_bucket=4, token_granular=True))
+    rng = np.random.default_rng(4)
+    for r in _requests(cfg, 4, rng):
+        bat.submit(r)
+    plan = chaos.FaultPlan([chaos.FaultSpec("sched.step", "crash_replica",
+                                            at=2)])
+    done = []
+    crashes = 0
+    with chaos.active(plan) as h:
+        while bat.pending() or crashes == 0:
+            try:
+                done.extend(bat.run())
+                break
+            except chaos.InjectedFault:
+                crashes += 1
+    assert crashes == 1 and h.fired_count("crash_replica") == 1
+    rids = sorted(c.rid for c in done)
+    # in-flight requests at the kill are lost (their slots died with the
+    # process); every still-queued request completes after the restart
+    assert set(rids) <= {0, 1, 2, 3} and len(rids) == len(set(rids))
+    assert bat.pending() == 0
