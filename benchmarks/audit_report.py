@@ -1,0 +1,227 @@
+"""Audit-trail report: what the adaptation loop *actually did*.
+
+``audit.jsonl`` (``repro.obs.audit``) accumulates every retune, canary
+verdict, SLO alert, rollback and quarantine next to the policy store.
+This module turns that history into the numbers an operator asks for:
+
+* **gain realization** — promoted guarded retunes carry both the sweep's
+  ``predicted_gain`` (full ring buffer) and the canary's holdout scores
+  (``canary.incumbent - canary.winner`` = the *realized* gain on unseen
+  operands).  The realization ratio is the honesty check on the tuner:
+  a sweep that always predicts more than the holdout delivers is
+  overfitting its buffer.
+* **rejection rate** — what fraction of retune attempts the guarded
+  rollout refused (canary holdout loss, or an alerting veto-bearing SLO).
+* counts of rollbacks, quarantines, and SLO alert transitions.
+
+It also runs a deterministic **SLO-veto scenario** (the BENCH_8 CI gate
+``slo_veto_blocks_promotion``): a controller with canaried rollout gets an
+already-burning QoR SLO attached, a manual retune's winner CONFIRMS on
+the holdout, and the promotion must still be refused — with the veto and
+the alert both landing in the audit log.
+
+    PYTHONPATH=src python -m benchmarks.audit_report [--audit PATH]
+
+With ``--audit`` the report summarizes an existing ``audit.jsonl``
+(e.g. the one a ``--fleet`` serve wrote next to its policy store) instead
+of synthesizing history; the veto scenario runs either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+from typing import List, Optional
+
+import numpy as np
+
+RETUNE_KINDS = ("retune", "canary_rejected", "slo_veto")
+
+
+def read_events(path: str) -> List[dict]:
+    """Parse an ``audit.jsonl`` leniently (skip torn/garbage lines — the
+    log is append-only and a crash can tear the tail)."""
+    out = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue
+    except OSError:
+        pass
+    return out
+
+
+def summarize(events: List[dict]) -> dict:
+    """Roll an audit event list up into the operator-facing numbers."""
+    by_kind: dict = {}
+    for e in events:
+        by_kind[e.get("kind", "?")] = by_kind.get(e.get("kind", "?"), 0) + 1
+    attempts = sum(by_kind.get(k, 0) for k in RETUNE_KINDS)
+    refused = by_kind.get("canary_rejected", 0) + by_kind.get("slo_veto", 0)
+    predicted, realized, ratios = [], [], []
+    for e in events:
+        if e.get("kind") != "retune" or "canary" not in e:
+            continue
+        p = float(e.get("predicted_gain", 0.0))
+        r = float(e["canary"]["incumbent"]) - float(e["canary"]["winner"])
+        predicted.append(p)
+        realized.append(r)
+        if p > 0:
+            ratios.append(r / p)
+    return {
+        "events": len(events),
+        "by_kind": dict(sorted(by_kind.items())),
+        "retune_attempts": attempts,
+        "rejection_rate": (refused / attempts) if attempts else 0.0,
+        "promoted_with_canary": len(realized),
+        "predicted_gain_mean": float(np.mean(predicted)) if predicted else None,
+        "realized_gain_mean": float(np.mean(realized)) if realized else None,
+        "gain_realization": float(np.mean(ratios)) if ratios else None,
+        "rollbacks": by_kind.get("rollback", 0),
+        "quarantined": by_kind.get("quarantine", 0),
+        "slo_alerts": by_kind.get("slo_alert", 0),
+    }
+
+
+def _controller(store, **kw):
+    import repro.runtime as R
+
+    cfg = dict(decay=0.4, drift_threshold=10.0,   # manual retunes only
+               min_observe_steps=1, cooldown_steps=0, buffer_size=1024,
+               canary=True)
+    cfg.update(kw)
+    ctrl = R.AdaptiveController(
+        R.SwapPolicy("mul8u_trunc0_4", configs={"*": None}),
+        targets=("stream",), cfg=R.AdaptiveConfig(**cfg), store=store)
+    ctrl.warmup()
+    ctrl.resume_from_store()
+    return ctrl
+
+
+def promoted_retune_history(root: str) -> List[dict]:
+    """Synthesize a clean promoted guarded retune (no SLO attached): the
+    canary CONFIRMS the sweep winner over the NoSwap incumbent and its
+    holdout scores ride on the audited event — the gain-realization
+    source."""
+    from repro.fleet import PolicyStore
+
+    store = PolicyStore(root)
+    ctrl = _controller(store)
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                              rng.integers(0, 256, 2048))
+    ev = ctrl.retune("stream")
+    assert ev.promoted, "clean canary run should promote"
+    return ctrl.audit.read()
+
+
+def slo_veto_scenario(root: str) -> dict:
+    """The CI-gated scenario: an alerting veto-bearing QoR SLO must block
+    an otherwise-CONFIRMED canary promotion, keep the incumbent serving,
+    and audit both the alert and the veto."""
+    from repro.fleet import PolicyStore
+    from repro.obs import SLOEngine, SLOSpec
+
+    store = PolicyStore(root)
+    ctrl = _controller(store)
+    # absolute guard band at 0 with tiny windows: every observed MAE of the
+    # truncation multiplier is "bad", so the spec burns to alerting within
+    # min_events observes — deterministically, before the retune below
+    engine = SLOEngine([SLOSpec(
+        name="qor_stream", kind="qor", source="stream", threshold=0.0,
+        objective=0.1, short_window=4, long_window=4, min_events=2,
+        veto_promotion=True)], audit=ctrl.audit)
+    ctrl.attach_slo(engine)
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                              rng.integers(0, 256, 2048))
+    alert_live = engine.vetoes_promotion() == "qor_stream"
+    ev = ctrl.retune("stream")
+    kinds = [e["kind"] for e in ctrl.audit.read()]
+    veto_events = [e for e in ctrl.audit.read() if e["kind"] == "slo_veto"]
+    return {
+        "alert_armed_before_retune": bool(alert_live),
+        "promotion_blocked": not ev.promoted,
+        "incumbent_kept": ctrl.policy.lookup("stream") is None,
+        "store_untouched": store.current_version() == 1,
+        "candidate_rejected": store.candidate_version() is None,
+        "alert_audited": "slo_alert" in kinds,
+        "veto_audited": bool(veto_events)
+        and veto_events[0].get("vetoed_by") == "qor_stream",
+        "slo_veto_blocks_promotion": bool(
+            alert_live and not ev.promoted
+            and ctrl.policy.lookup("stream") is None
+            and store.current_version() == 1
+            and "slo_alert" in kinds and veto_events),
+    }
+
+
+def run(quick: bool = False, audit_path: Optional[str] = None) -> dict:
+    with tempfile.TemporaryDirectory() as td:
+        if audit_path is not None:
+            events = read_events(audit_path)
+            source = audit_path
+        else:
+            events = promoted_retune_history(td + "/promoted")
+            source = "synthetic (promoted-retune scenario)"
+        veto = slo_veto_scenario(td + "/veto")
+        # the veto scenario's own audit history joins the roll-up so the
+        # summary always exercises every kind the report knows about
+        events = events + read_events(td + "/veto/audit.jsonl")
+    out = summarize(events)
+    out.update({
+        "bench": "audit_report",
+        "quick": quick,
+        "source": source,
+        "scenario": veto,
+        "slo_veto_blocks_promotion": veto["slo_veto_blocks_promotion"],
+    })
+    return out
+
+
+def format_table(out) -> str:
+    kinds = " ".join(f"{k}={v}" for k, v in out["by_kind"].items())
+    fmt = lambda v: "-" if v is None else f"{v:.3f}"  # noqa: E731
+    sc = out["scenario"]
+    return "\n".join([
+        "Audit report — retune/canary/rollback history (PR 8)",
+        f"source: {out['source']}",
+        f"events: {out['events']}  [{kinds}]",
+        (f"retune attempts: {out['retune_attempts']}  "
+         f"rejection rate: {out['rejection_rate']:.2f}  "
+         f"rollbacks: {out['rollbacks']}  "
+         f"quarantined: {out['quarantined']}  "
+         f"slo alerts: {out['slo_alerts']}"),
+        (f"gain: predicted {fmt(out['predicted_gain_mean'])} -> realized "
+         f"{fmt(out['realized_gain_mean'])} on the canary holdout "
+         f"(realization {fmt(out['gain_realization'])}, "
+         f"{out['promoted_with_canary']} promoted events)"),
+        (f"SLO-veto scenario: alert armed {sc['alert_armed_before_retune']}, "
+         f"promotion blocked {sc['promotion_blocked']}, incumbent kept "
+         f"{sc['incumbent_kept']}, store untouched {sc['store_untouched']}, "
+         f"alert+veto audited "
+         f"{sc['alert_audited'] and sc['veto_audited']}"),
+        f"slo_veto_blocks_promotion: {out['slo_veto_blocks_promotion']}",
+    ])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--audit", default=None, metavar="PATH",
+                    help="summarize this audit.jsonl instead of synthesizing "
+                         "a promoted-retune history")
+    args = ap.parse_args()
+    print(format_table(run(quick=args.quick, audit_path=args.audit)))
+
+
+if __name__ == "__main__":
+    main()

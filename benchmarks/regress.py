@@ -8,7 +8,7 @@ artifact against the committed baseline and fails on any counter that got
 worse; wall-time movement is reported informationally only.
 
     PYTHONPATH=src python -m benchmarks.run --quick --check \
-        [--baseline benchmarks/baselines/BENCH_6.json]
+        [--baseline benchmarks/baselines/BENCH_7.json]
 """
 from __future__ import annotations
 
@@ -74,6 +74,16 @@ RULES = [
     ("chaos.armed_idle_bit_identical", "true"),
     ("chaos.armed_idle_zero_retraces", "true"),
     ("chaos.survived_all", "true"),
+    # QoR observability (PR 8): the bit-identity serve now runs with
+    # per-request attribution + the SLO engine + a StatsD push exporter all
+    # live — every completion must carry a top-k per-target/tile error-share
+    # summary under unique correlation ids, and an alerting veto-bearing
+    # SLO must block an otherwise-confirmed canary promotion (audited)
+    ("serving.qor_attribution_live", "true"),
+    ("serving.corr_ids_unique", "true"),
+    ("audit.slo_veto_blocks_promotion", "true"),
+    ("audit.scenario.alert_audited", "true"),
+    ("audit.scenario.veto_audited", "true"),
     # ratio floors (PR 6): Pallas slab + K-stacked dynamic-dispatch
     # speedups are same-run wall ratios, gated against absolute minima
     ("kernel_reduction.static_speedup", "ratio>=0.6"),
@@ -95,6 +105,7 @@ WALL_NOTES = [
     "serving.token_ttft_p99_s",
     "chaos.post_recovery_mae",
     "chaos.baseline_mae",
+    "audit.gain_realization",
 ]
 
 

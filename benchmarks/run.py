@@ -4,13 +4,14 @@
 
 Prints each table and a ``name,us_per_call,derived`` CSV summary line per
 benchmark (derived = the table's headline number).  Also runs the hot-path
-perf microbenchmarks plus the fleet-, token-granular-serving-, and
-chaos-recovery microbenchmarks and writes ``BENCH_7.json`` (dispatch /
-reduction / decode / fleet / tile-adaptation / serving / chaos numbers —
-this PR's point on the perf trajectory).  ``--check`` then diffs the
-artifact's deterministic counters against the committed baseline
-(``benchmarks/baselines/BENCH_6.json``) and exits non-zero on regression —
-wall times are reported informationally only (see ``benchmarks.regress``).
+perf microbenchmarks plus the fleet-, token-granular-serving-,
+chaos-recovery-, and audit-report microbenchmarks and writes
+``BENCH_8.json`` (dispatch / reduction / decode / fleet / tile-adaptation
+/ serving / chaos / audit numbers — this PR's point on the perf
+trajectory).  ``--check`` then diffs the artifact's deterministic counters
+against the committed baseline (``benchmarks/baselines/BENCH_7.json``) and
+exits non-zero on regression — wall times are reported informationally
+only (see ``benchmarks.regress``).
 """
 from __future__ import annotations
 
@@ -18,21 +19,25 @@ import argparse
 import sys
 import time
 
-from . import (adaptive_table, app_table, chaos_table, component_table,
-               fleet_table, hw_table, perf_table, regress, roofline_table,
-               serving_table)
+from . import (adaptive_table, app_table, audit_report, chaos_table,
+               component_table, fleet_table, hw_table, perf_table, regress,
+               roofline_table, serving_table)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small fast subset")
     ap.add_argument("--full", action="store_true", help="all multipliers + ALL parts")
-    ap.add_argument("--bench-out", default="BENCH_7.json",
-                    help="perf/fleet/tile/serving/chaos JSON artifact path")
+    ap.add_argument("--bench-out", default="BENCH_8.json",
+                    help="perf/fleet/tile/serving/chaos/audit JSON artifact "
+                         "path")
     ap.add_argument("--check", action="store_true",
                     help="fail on deterministic-counter regression vs --baseline")
-    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_6.json",
+    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_7.json",
                     help="committed baseline artifact for --check")
+    ap.add_argument("--audit", default=None, metavar="PATH",
+                    help="audit.jsonl for the audit report row (default: "
+                         "synthesized promoted-retune history)")
     args = ap.parse_args()
 
     csv = ["name,us_per_call,derived"]
@@ -95,7 +100,9 @@ def main() -> None:
                f"occupancy={srv['wave_occupancy']:.2f}->"
                f"{srv['token_granular_occupancy']:.2f}"
                f" splices={srv['token_splices']}"
-               f" bit_identical={srv['bit_identical_requests']}")
+               f" bit_identical={srv['bit_identical_requests']}"
+               f" qor_live={srv['qor_attribution_live']}"
+               f" statsd_lines={srv['statsd_lines_sent']}")
 
     t0 = time.time()
     cha = chaos_table.run(quick=args.quick)
@@ -106,12 +113,24 @@ def main() -> None:
                f"{cha['rollbacks_triggered']}"
                f" survived_all={cha['survived_all']}")
 
+    t0 = time.time()
+    aud = audit_report.run(quick=args.quick, audit_path=args.audit)
+    print("\n" + audit_report.format_table(aud))
+    gr = aud["gain_realization"]
+    csv.append(f"audit_report,{1e6*(time.time()-t0):.0f},"
+               f"rejection_rate={aud['rejection_rate']:.2f}"
+               f" gain_realization={'-' if gr is None else f'{gr:.2f}'}"
+               f" slo_veto_blocks_promotion="
+               f"{aud['slo_veto_blocks_promotion']}")
+
     perf["fleet"] = fleet
     perf["tile_adaptation"] = ad["tile"]
     perf["serving"] = srv
     perf["chaos"] = cha
+    perf["audit"] = aud
     perf_table.write_json(perf, args.bench_out)
-    print(f"(perf+fleet+tile+serving+chaos tables written to {args.bench_out})")
+    print(f"(perf+fleet+tile+serving+chaos+audit tables written to "
+          f"{args.bench_out})")
 
     t0 = time.time()
     hw = hw_table.run()

@@ -27,12 +27,23 @@ requests time out — under an injected per-step stall
 (``fleet.chaos``) — without crashing the drain.  ``shed_respects_bound``
 and ``timeouts_match_deadlines`` join the CI gate.
 
+The PR-8 QoR-observability additions ride on the SAME token serve used
+for the identity check: per-request error attribution (tile-granular —
+the controller runs ``tile_rows=2``), the SLO/error-budget engine, and a
+live StatsD push exporter are all enabled, and the bit-identity /
+zero-retrace gates are re-verified under that instrumentation.
+``qor_attribution_live`` (every completion carries a top-k per-target
+error-share summary with a per-tile annotation), ``corr_ids_unique``,
+and ``statsd_lines_sent > 0`` join the CI gate.
+
     PYTHONPATH=src python -m benchmarks.serving_table [--quick]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import tempfile
 import time
 
 import jax
@@ -53,12 +64,13 @@ def _tiny():
     return cfg, init_params(jax.random.PRNGKey(0), cfg)
 
 
-def _controller(cfg):
+def _controller(cfg, tile_rows: int = 0):
     import repro.runtime as R
 
     return R.AdaptiveController(
         R.SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
-        cfg=R.AdaptiveConfig(min_observe_steps=10 ** 6))
+        cfg=R.AdaptiveConfig(min_observe_steps=10 ** 6,
+                             tile_rows=tile_rows))
 
 
 def axbench_trace(cfg, n_req: int, max_prompt: int, max_new: int):
@@ -90,21 +102,45 @@ def run(quick: bool = False):
     T = 6 if quick else 10
     buckets = (8, 16)
 
-    def serve(token_granular: bool):
+    from repro import obs
+
+    def serve(token_granular: bool, slo=None, tile_rows: int = 0):
         bcfg = BatcherConfig(n_slots=4, prompt_buckets=buckets,
                              new_token_bucket=T,
                              token_granular=token_granular)
-        bat = ContinuousBatcher(params, cfg, bcfg, adaptive=_controller(cfg))
+        ctrl = _controller(cfg, tile_rows=tile_rows)
+        bat = ContinuousBatcher(params, cfg, bcfg, adaptive=ctrl)
+        if slo is not None:
+            ctrl.attach_slo(slo)
+            bat.attach_slo(slo)
         for r in axbench_trace(cfg, n_req, max_prompt=max(buckets), max_new=T):
             bat.submit(Request(r.rid, r.tokens.copy(), r.max_new))
         t0 = time.perf_counter()
         done = bat.run()
         dt = time.perf_counter() - t0
         toks = {c.rid: c.tokens.tolist() for c in done}
-        return toks, bat, sum(len(t) for t in toks.values()) / dt
+        return toks, bat, sum(len(t) for t in toks.values()) / dt, done
 
-    wave_toks, wave_bat, wave_tps = serve(False)
-    tok_toks, tok_bat, tok_tps = serve(True)
+    # the token serve carries the FULL PR-8 instrumentation — per-request
+    # attribution (tile-granular), the SLO engine, and a StatsD exporter
+    # pushed right after the drain — and the identity/retrace gates below
+    # must hold with all of it live.  The wave serve stays the bare oracle.
+    slo = obs.SLOEngine(obs.default_serving_slos(qor_targets=cfg.ax.targets))
+    wave_toks, wave_bat, wave_tps, _ = serve(False)
+    tok_toks, tok_bat, tok_tps, tok_done = serve(True, slo=slo, tile_rows=2)
+
+    with tempfile.TemporaryDirectory() as td:
+        mirror = os.path.join(td, "metrics.statsd")
+        sx = obs.StatsdExporter("127.0.0.1", 8125, mirror=mirror)
+        statsd_lines_sent = sx.push(obs.default_registry())
+        sx.close()
+    qor_attribution_live = bool(tok_done) and all(
+        c.corr is not None and c.qor is not None and c.qor["top"]
+        and c.qor["basis"] == "request"
+        and any("top_tile" in e for e in c.qor["top"])
+        for c in tok_done)
+    corr_ids_unique = len({c.corr for c in tok_done}) == len(tok_done)
+    slo_latency_events = slo.events("ttft") + slo.events("e2e")
     # per-request latency percentiles off the batchers' request logs
     # (submit -> first token / retirement; wave TTFT == e2e by construction
     # — the whole wave is one fused dispatch).  Wall-clock: informational
@@ -120,7 +156,10 @@ def run(quick: bool = False):
     import repro.core as C
 
     sizes0 = [f._cache_size() for f in E._TOKEN_FNS.values()]
-    ctrl = _controller(cfg)
+    # same tile_rows as the instrumented serve above: tile telemetry is part
+    # of the compiled step's signature, so the retrace check must hold the
+    # granularity fixed while flipping the (traced) policy values
+    ctrl = _controller(cfg, tile_rows=2)
     ctrl.policy.set_config("mlp", C.SwapConfig("B", 5, 1))
     bat2 = ContinuousBatcher(
         params, cfg,
@@ -182,6 +221,13 @@ def run(quick: bool = False):
         "stragglers": bat3.stats["stragglers"],
         "shed_respects_bound": bool(shed_ok),
         "timeouts_match_deadlines": bool(timeouts_ok),
+        "qor_attribution_live": bool(qor_attribution_live),
+        "corr_ids_unique": bool(corr_ids_unique),
+        "qor_fleet_share": {t: round(s, 4)
+                            for t, s in tok_bat.qor.fleet_share().items()},
+        "slo_latency_events": int(slo_latency_events),
+        "slo_alerts": len(slo.alerting()),
+        "statsd_lines_sent": int(statsd_lines_sent),
         "wave_ttft_p50_s": wave_lat.get("ttft_p50"),
         "wave_ttft_p99_s": wave_lat.get("ttft_p99"),
         "wave_e2e_p50_s": wave_lat.get("e2e_p50"),
@@ -224,6 +270,14 @@ def format_table(out) -> str:
          f"{out['timeouts']} timeouts (deadlines ok: "
          f"{out['timeouts_match_deadlines']}), "
          f"{out['stragglers']} straggler steps flagged"),
+        (f"QoR attribution on every completion (top-k + tile): "
+         f"{out['qor_attribution_live']} "
+         f"(corr ids unique: {out['corr_ids_unique']}, fleet share "
+         + " ".join(f"{t}={s:.2f}"
+                    for t, s in out['qor_fleet_share'].items()) + ")"),
+        (f"SLO engine live ({out['slo_latency_events']} latency events, "
+         f"{out['slo_alerts']} alerts) + statsd push "
+         f"({out['statsd_lines_sent']} lines) during the gated serve"),
         "  (* CPU wall in this container; occupancy / identity /"
         " recompile counts are the gate metrics)",
     ]

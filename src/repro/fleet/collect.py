@@ -196,7 +196,7 @@ def make_sharded_summarizer(mult_name: str, mesh: Mesh, target: str = "stream",
         if tile_rows == 0:                   # original single-record surface
             rec = {k: v[None] for k, v in rec.items()}   # leading call axis
             return aggregate_records({target: rec}, axes)[target]
-        trec = tile_summary(a, b, mult, tile_rows)
+        trec = tile_summary(a, b, mult, tile_rows, dyn=dyn)
         recs = {target: {k: v[None] for k, v in rec.items()},
                 tile_key(target): {k: v[None] for k, v in trec.items()}}
         return aggregate_records(recs, axes)

@@ -78,13 +78,15 @@ _SPLICES = _REG.counter(
     "token-mode mid-flight admissions spliced into a live batch")
 _TTFT = _REG.histogram(
     "repro_request_ttft_seconds",
-    "submit -> first token (wave mode: == e2e at wave granularity)")
+    "submit -> first token (wave mode: == e2e at wave granularity)",
+    buckets=obs.TTFT_BUCKETS)
 _E2E = _REG.histogram(
-    "repro_request_e2e_seconds", "submit -> request retirement (by mode)")
+    "repro_request_e2e_seconds", "submit -> request retirement (by mode)",
+    buckets=obs.E2E_BUCKETS)
 _STEP_WALL = _REG.histogram(
     "repro_token_step_seconds",
     "host wall per token-granular decode step (dispatch + host bookkeeping)",
-    buckets=obs.LATENCY_BUCKETS)
+    buckets=obs.DISPATCH_BUCKETS)
 _TOKENS_PER_S = _REG.gauge(
     "repro_decode_tokens_per_second",
     "real (non-pad, non-filler) tokens per wall second over the last drain")
@@ -123,6 +125,14 @@ class Completion:
     prompt_len: int
     bucket: int
     status: str = "ok"          # "ok" | "timeout" (partial/empty tokens)
+    # correlation id assigned at submit — unique across splices/backfills
+    # and across drains even when rids recur (qor attribution + trace key)
+    corr: Optional[str] = None
+    # per-request QoR attribution summary (obs.qor.ErrorAttributor.finish):
+    # per-target/per-tile ew-MAE, error shares, top-k contributors.  Token
+    # mode with an adaptive controller only; None in wave mode (the wave
+    # oracle stays uninstrumented) and when telemetry is off.
+    qor: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -199,6 +209,21 @@ class ContinuousBatcher:
         # e2e seconds) — the source benchmarks/serving_table.py reduces to
         # TTFT/e2e p50/p99 per mode
         self.request_log: List[dict] = []
+        # QoR attribution (obs.qor): correlation ids assigned at submit —
+        # "<rid>#<arrival>" stays unique across splices/backfills and across
+        # drains even when rids recur — and exposure accounting over the
+        # token loop's step telemetry.  Wave mode carries the corr id on its
+        # completions but never attributes (the oracle stays uninstrumented).
+        self._corr: Dict[int, str] = {}          # pending rid -> corr id
+        self.qor = obs.ErrorAttributor()
+        # optional SLO engine (obs.slo, attach_slo): fed every request's
+        # ttft/e2e sample as it retires
+        self.slo = None
+
+    def attach_slo(self, engine) -> None:
+        """Attach an :class:`repro.obs.slo.SLOEngine` to the latency stream
+        (sources ``"ttft"`` and ``"e2e"``)."""
+        self.slo = engine
 
     def _update_queue_gauges(self) -> None:
         for b, q in self.queues.items():
@@ -209,6 +234,10 @@ class ContinuousBatcher:
         if ttft is not None and observe_ttft:
             _TTFT.observe(ttft, mode=self.mode)
         _E2E.observe(e2e, mode=self.mode)
+        if self.slo is not None:
+            if ttft is not None:
+                self.slo.observe_latency("ttft", ttft)
+            self.slo.observe_latency("e2e", e2e)
         self.request_log.append(dict(
             rid=req.rid, bucket=self.bucket_of(len(req.tokens)),
             prompt_len=len(req.tokens), max_new=req.max_new,
@@ -243,10 +272,17 @@ class ContinuousBatcher:
         req.tokens = np.asarray(req.tokens, np.int32).reshape(-1)
         self.queues[self.bucket_of(len(req.tokens))].append(req)
         self._order[req.rid] = self._arrival
+        corr = f"{req.rid}#{self._arrival}"
+        self._corr[req.rid] = corr
         self._arrival += 1
         self._submit_t[req.rid] = time.perf_counter()
         obs.async_begin("request", req.rid, prompt_len=len(req.tokens),
-                        max_new=req.max_new)
+                        max_new=req.max_new, corr=corr)
+        if self.bcfg.token_granular:
+            # exposure accounting opens at submit so even a request that
+            # times out queued (or retires within its admission step) still
+            # closes with a summary (fleet-basis fallback)
+            self.qor.begin(corr, req.rid)
         self._update_queue_gauges()
         return True
 
@@ -268,13 +304,15 @@ class ContinuousBatcher:
         e2e = time.perf_counter() - self._submit_t.pop(
             req.rid, time.perf_counter())
         self._record_latency(req, None, e2e, observe_ttft=False)
+        corr = self._corr.pop(req.rid, None)
+        qor = self.qor.finish(corr) if corr is not None else None
         obs.instant("timeout", cat="scheduler", rid=req.rid, where=where)
         obs.async_end("request", req.rid, status="timeout")
         return Completion(req.rid, np.asarray(tokens, np.int32),
                           self.wave if self.mode == "wave"
                           else self.stats["decode_steps"],
                           len(req.tokens), self.bucket_of(len(req.tokens)),
-                          status="timeout")
+                          status="timeout", corr=corr, qor=qor)
 
     def _expire_queued(self) -> List[Completion]:
         """Sweep the admission queues for requests whose deadline passed
@@ -396,7 +434,8 @@ class ContinuousBatcher:
         done = []
         for i, req in enumerate(admitted):
             done.append(Completion(req.rid, out[i, :req.max_new], self.wave,
-                                   len(req.tokens), bucket))
+                                   len(req.tokens), bucket,
+                                   corr=self._corr.pop(req.rid, None)))
             self.stats["real_tokens"] += int(req.max_new)
             self.stats["padded_tokens"] += int(
                 bucket - len(req.tokens) + bc.new_token_bucket - req.max_new)
@@ -480,12 +519,21 @@ class ContinuousBatcher:
             req.rid, time.perf_counter())
         # TTFT was already observed at the admission splice
         self._record_latency(req, st.get("ttft"), e2e, observe_ttft=False)
+        corr = self._corr.pop(req.rid, None)
+        qor = self.qor.finish(corr) if corr is not None else None
         obs.instant("retire", cat="scheduler", rid=req.rid, slot=slot)
-        obs.async_end("request", req.rid, step=self.stats["decode_steps"],
-                      status=status)
+        end_kw = dict(step=self.stats["decode_steps"], status=status)
+        if qor is not None and qor["top"]:
+            # the top contributor rides on the request's async trace span so
+            # timeline views show *where* each request's error concentrated
+            end_kw.update(qor_top=qor["top"][0]["where"],
+                          qor_share=round(qor["top"][0]["share"], 4),
+                          qor_basis=qor["basis"])
+        obs.async_end("request", req.rid, **end_kw)
         return [Completion(req.rid, np.asarray(st["toks"], np.int32),
                            self.stats["decode_steps"], len(req.tokens),
-                           self.bucket_of(len(req.tokens)), status=status)]
+                           self.bucket_of(len(req.tokens)), status=status,
+                           corr=corr, qor=qor)]
 
     def _run_token_granular(self) -> List[Completion]:
         """Drain the queues with mid-flight admission: one compiled step
@@ -522,6 +570,11 @@ class ContinuousBatcher:
                 raise chaos.InjectedFault("sched.step: replica killed")
             chaos.maybe_stall(faults, default=0.05)
             active_np = np.asarray([st is not None for st in state])
+            # the corr ids live in THIS step — captured before the retire/
+            # splice sweep below, so telemetry produced by the step is
+            # charged to exactly the requests that were decoding in it
+            live_corrs = [self._corr[st["req"].rid]
+                          for st in state if st is not None]
             key, sub = jax.random.split(key)
             gate = (self.stats["decode_steps"] % k_obs == 0)
             t_step = time.perf_counter()
@@ -545,10 +598,17 @@ class ContinuousBatcher:
             if self.adaptive is not None:
                 tok_d, cache, telem = out
                 if pending is not None:      # one-step-stale observe keeps
-                    self.adaptive.observe(jax.device_get(pending))
+                    self.adaptive.observe(pending)
                     pending = None           # the dispatch pipeline warm
                 if gate:
-                    pending = telem
+                    # host transfer NOW (the tok sync below drains the same
+                    # dispatch, so this adds no stall) — attribution must
+                    # charge this step's live corr set before any of them
+                    # retires in the sweep below; the controller still
+                    # observes one step stale, exactly as before
+                    host_telem = jax.device_get(telem)
+                    self.qor.observe_step(host_telem, live_corrs)
+                    pending = host_telem
             else:
                 tok_d, cache = out
             tok = np.array(tok_d)        # writable copy (splices update rows)
@@ -574,7 +634,7 @@ class ContinuousBatcher:
                         self.stats["splices"] += 1
                         _SPLICES.inc(1)
         if pending is not None and self.adaptive is not None:
-            self.adaptive.observe(jax.device_get(pending))
+            self.adaptive.observe(pending)
         post = (0 if warmup_installs is None
                 else int(obs.retrace_total("token_step") - warmup_installs))
         self.stats["decode_retraces_post_warmup"] = post
@@ -606,9 +666,17 @@ class ContinuousBatcher:
         return useful / total if total else 1.0
 
     def latency_summary(self) -> dict:
-        """TTFT / e2e percentiles (seconds) over ``request_log`` — exact
-        order statistics from the per-request records, not bucket-resolution
-        histogram reads.  Empty log -> empty dict."""
+        """TTFT / e2e percentiles (seconds) over ``request_log``.
+
+        The ``*_p50``/``*_p99`` keys are exact order statistics from the
+        per-request records (unchanged interface).  Each also carries a
+        bucket-resolution twin: ``*_bucketed`` is what the corresponding
+        registry histogram (tuned ``TTFT_BUCKETS``/``E2E_BUCKETS`` family)
+        reports for the same samples via linear interpolation, and
+        ``*_resolution`` the covering bucket's width — so gates and humans
+        comparing exact percentiles against histogram reads see a stated
+        resolution instead of an exact-vs-bucket-floor mismatch.  Empty
+        log -> empty dict."""
         if not self.request_log:
             return {}
         e2e = np.asarray([r["e2e"] for r in self.request_log])
@@ -617,9 +685,17 @@ class ContinuousBatcher:
         out = dict(requests=len(self.request_log),
                    e2e_p50=float(np.percentile(e2e, 50)),
                    e2e_p99=float(np.percentile(e2e, 99)))
+        for q, name in ((0.50, "e2e_p50"), (0.99, "e2e_p99")):
+            v, res = obs.bucket_percentile(e2e, obs.E2E_BUCKETS, q)
+            out[name + "_bucketed"] = v
+            out[name + "_resolution"] = res
         if ttft.size:
             out.update(ttft_p50=float(np.percentile(ttft, 50)),
                        ttft_p99=float(np.percentile(ttft, 99)))
+            for q, name in ((0.50, "ttft_p50"), (0.99, "ttft_p99")):
+                v, res = obs.bucket_percentile(ttft, obs.TTFT_BUCKETS, q)
+                out[name + "_bucketed"] = v
+                out[name + "_resolution"] = res
         return out
 
     def describe(self) -> str:

@@ -80,9 +80,19 @@ def _observability(args):
     * ``--device-trace DIR`` — additionally wrap the run in a
       ``jax.profiler`` device trace (heavyweight XLA/TensorBoard dump).
 
+    * ``--statsd HOST:PORT`` — push the registry as StatsD/DogStatsD lines
+      over UDP at exit (``--statsd-mirror FILE`` additionally appends every
+      line to FILE — the CI artifact, immune to UDP loss).
+    * ``--otlp-out PATH|URL`` — push one OTLP-JSON ``resourceMetrics``
+      payload to a ``.jsonl`` file (or POST it to an ``http(s)://``
+      collector endpoint) at exit.
+
     Any of these also installs the ``jax.monitoring`` compile listener, so
-    ``repro_jax_compiles_total`` counts every XLA backend compile."""
-    enabled = args.metrics_port is not None or args.obs_dir or args.device_trace
+    ``repro_jax_compiles_total`` counts every XLA backend compile.  At exit
+    the bucket-coverage check runs: any histogram family whose +Inf bucket
+    swallowed >5% of its observations warns loudly."""
+    enabled = (args.metrics_port is not None or args.obs_dir
+               or args.device_trace or args.statsd or args.otlp_out)
     if not enabled:
         yield
         return
@@ -91,6 +101,16 @@ def _observability(args):
               if args.metrics_port is not None else None)
     if server is not None:
         print(f"[obs] serving /metrics on port {server.port}")
+    exporters = []
+    if args.statsd:
+        exporters.append(obs.StatsdExporter.from_spec(
+            args.statsd, mirror=args.statsd_mirror))
+        print(f"[obs] statsd push -> udp://{args.statsd}"
+              + (f" (mirror {args.statsd_mirror})"
+                 if args.statsd_mirror else ""))
+    if args.otlp_out:
+        exporters.append(obs.OtlpJsonExporter(args.otlp_out))
+        print(f"[obs] otlp-json push -> {args.otlp_out}")
     rec = None
     if args.obs_dir:
         os.makedirs(args.obs_dir, exist_ok=True)
@@ -112,6 +132,16 @@ def _observability(args):
                                    f"{k}={v}" for k, v in sorted(
                                        vars(args).items()) if v))
             print(f"[obs] trace + metrics snapshots written to {args.obs_dir}")
+        if exporters:
+            n = obs.push_all(exporters)
+            print(f"[obs] pushed {n} payload units through "
+                  f"{len(exporters)} backend(s)")
+            for e in exporters:
+                e.close()
+        findings = obs.default_registry().check_bucket_coverage()
+        if findings:
+            print(f"[obs] {len(findings)} histogram series exceeded the "
+                  f"+Inf-bucket coverage threshold (see warnings)")
         if server is not None:
             if args.metrics_hold > 0:
                 print(f"[obs] holding /metrics open {args.metrics_hold}s")
@@ -184,6 +214,13 @@ def _run_fleet(args, cfg):
     print(f"[fleet] mesh={mesh.shape} slots={slots} store={store.root} "
           f"{'resumed v' + str(store.current_version()) if resumed else 'fresh'}")
     controller.warmup()
+    # SLO/error-budget engine: latency objectives on the batcher's TTFT/e2e
+    # stream plus per-target MAE guard bands anchored to the controller's
+    # drift reference; a burning QoR SLO re-arms the rollback guard and
+    # vetoes canary promotion (docs/observability.md)
+    slo = obs.SLOEngine(obs.default_serving_slos(qor_targets=cfg.ax.targets),
+                        audit=controller.audit)
+    controller.attach_slo(slo)
 
     params = init_params(jax.random.PRNGKey(0), cfg)
     bcfg = BatcherConfig(n_slots=slots,
@@ -192,6 +229,7 @@ def _run_fleet(args, cfg):
                          temperature=args.temperature,
                          token_granular=args.token_granular)
     bat = ContinuousBatcher(params, cfg, bcfg, adaptive=controller, mesh=mesh)
+    bat.attach_slo(slo)
     # one logical PolicyReader per replica: they adopt the policy current at
     # spin-up and then surface the staleness metric (versions behind
     # CURRENT) until their next poll — the fleet lag monitor
@@ -217,6 +255,8 @@ def _run_fleet(args, cfg):
     print(f"[fleet] served {len(done)} requests / {toks} tokens in {dt:.2f}s "
           f"(incl. compile)")
     print(f"[fleet] {controller.telemetry.describe()}")
+    print(f"[fleet] {bat.qor.describe()}")
+    print(f"[fleet] {slo.describe()}")
     print(f"[fleet] re-tunes: {len(controller.retunes)} "
           f"tile re-tunes: {len(controller.tile_retunes)} "
           f"store v{store.current_version()} {controller.policy.describe()}")
@@ -290,6 +330,16 @@ def main():
     ap.add_argument("--device-trace", default=None, metavar="DIR",
                     help="wrap the run in a jax.profiler device trace "
                          "(XLA/TensorBoard dump under DIR; heavyweight)")
+    ap.add_argument("--statsd", default=None, metavar="HOST:PORT",
+                    help="push the metric registry as StatsD/DogStatsD UDP "
+                         "datagrams at exit")
+    ap.add_argument("--statsd-mirror", default=None, metavar="FILE",
+                    help="also append every StatsD line to FILE (lossless "
+                         "CI artifact; requires --statsd)")
+    ap.add_argument("--otlp-out", default=None, metavar="PATH|URL",
+                    help="push one OTLP-JSON resourceMetrics payload at "
+                         "exit: append to PATH (.jsonl) or POST to an "
+                         "http(s):// collector endpoint")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]

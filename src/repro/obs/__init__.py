@@ -13,6 +13,19 @@ One measurement substrate for the whole runtime (ISSUE 6):
             drift score, winning triple / tile-grid digest, predicted gain,
             store version): policy history is replayable after the fact
 
+Quality-of-result observability (ISSUE 8) layers on top:
+
+  qor      — per-request error attribution: correlation ids threaded from
+             scheduler admission through token steps; each Completion
+             carries per-target/per-tile ew-MAE shares and top-k
+             contributors reduced host-side from the step records
+  slo      — declarative SLO specs + multi-window burn-rate evaluation;
+             alert events land in the audit log, and an alerting QoR SLO
+             vetoes canary promotion in the controller
+  backends — push exporters (StatsD line protocol over UDP, OTLP-JSON
+             file/HTTP) behind one interface next to the Prometheus pull
+             path (``launch/serve --statsd`` / ``--otlp-out``)
+
 plus **recompile accounting as a first-class metric**: every compiled-
 program install in the serving engine (``_ADAPTIVE_FNS`` / ``_TOKEN_FNS`` /
 the fused + prefill lru caches) counts into ``repro_retraces_total{kind=}``,
@@ -30,23 +43,33 @@ Metric name catalogue: see docs/observability.md.
 """
 from __future__ import annotations
 
-from . import audit, export, metrics, trace
+from . import audit, backends, export, metrics, qor, slo, trace
 from .audit import AUDIT_FILENAME, AuditLog, audit_for_store, grid_digest
+from .backends import (OtlpJsonExporter, StatsdExporter, otlp_json, push_all,
+                       statsd_lines)
 from .export import (MetricsServer, prometheus_text, registry_snapshot,
                      start_metrics_server, write_snapshot)
-from .metrics import (LATENCY_BUCKETS, Counter, Gauge, Histogram,
-                      MetricsRegistry, default_registry,
-                      reset_default_registry)
+from .metrics import (DISPATCH_BUCKETS, E2E_BUCKETS, LATENCY_BUCKETS,
+                      QOR_MAE_BUCKETS, TTFT_BUCKETS, Counter, Gauge,
+                      Histogram, MetricsRegistry, bucket_percentile,
+                      default_registry, reset_default_registry)
+from .qor import ErrorAttributor, step_error_summary
+from .slo import SLOAlert, SLOEngine, SLOSpec, default_serving_slos
 from .trace import (TraceRecorder, async_begin, async_end, current_recorder,
                     device_trace, install_recorder, instant, span)
 
 __all__ = [
-    "audit", "export", "metrics", "trace",
+    "audit", "backends", "export", "metrics", "qor", "slo", "trace",
     "AUDIT_FILENAME", "AuditLog", "audit_for_store", "grid_digest",
+    "OtlpJsonExporter", "StatsdExporter", "otlp_json", "push_all",
+    "statsd_lines",
     "MetricsServer", "prometheus_text", "registry_snapshot",
     "start_metrics_server", "write_snapshot",
-    "LATENCY_BUCKETS", "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "default_registry", "reset_default_registry",
+    "LATENCY_BUCKETS", "TTFT_BUCKETS", "E2E_BUCKETS", "DISPATCH_BUCKETS",
+    "QOR_MAE_BUCKETS", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "bucket_percentile", "default_registry", "reset_default_registry",
+    "ErrorAttributor", "step_error_summary",
+    "SLOAlert", "SLOEngine", "SLOSpec", "default_serving_slos",
     "TraceRecorder", "async_begin", "async_end", "current_recorder",
     "device_trace", "install_recorder", "instant", "span",
     "RETRACES", "JAX_COMPILES", "count_retrace", "retrace_total",

@@ -529,5 +529,5 @@ def ax_dense_dyn(x, w, policy: AxPolicy, dyn, scope=None, target: str = ""):
         if scope.tile_rows > 0:
             scope.record(tile_key(target),
                          tile_summary(xq, wq, mult, scope.tile_rows,
-                                      gate=scope.gate))
+                                      gate=scope.gate, dyn=dyn))
     return _ax_dense_dyn_core(x, w, policy, dyn, xq, sx, wq, sw)

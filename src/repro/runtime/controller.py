@@ -126,7 +126,8 @@ def _summarize_pair(mult, a, b, dyn):
 def _summarize_pair_tiled(mult, a, b, dyn, gm: int):
     """Scalar + per-row-tile records for a raw 2-D operand stream (``a``
     rows are the tiled dimension)."""
-    return operand_summary(a, b, mult, dyn), tile_summary(a, b, mult, gm)
+    return (operand_summary(a, b, mult, dyn),
+            tile_summary(a, b, mult, gm, dyn=dyn))
 
 
 @dataclasses.dataclass
@@ -295,6 +296,12 @@ class AdaptiveController:
         #               adopted_step, steps)}
         self._guards: Dict[str, dict] = {}
         self.rollbacks: List[dict] = []
+        # QoR SLO engine (obs.slo; optional, attach_slo): fed the per-target
+        # ew_mae stream every observed step; an alerting veto-bearing SLO
+        # blocks canary promotion, and any alert on a target whose guarded
+        # adoption already disarmed re-arms its rollback guard
+        self.slo = None
+        self._last_adoptions: Dict[str, dict] = {}
 
     @property
     def tile_rows(self) -> int:
@@ -355,9 +362,23 @@ class AdaptiveController:
         for target, snap in self.telemetry.snapshot().items():
             if snap.get("bit_probs") is not None:
                 self.detector.rebase(target, snap["bit_probs"])
+            if (self.slo is not None and not is_tile_key(target)
+                    and snap.get("ew_mae") is not None):
+                self.slo.set_reference(target, float(snap["ew_mae"]))
         if threshold is not None:
             self.detector.cfg.threshold = threshold
             self.cfg.drift_threshold = threshold
+
+    def attach_slo(self, engine) -> None:
+        """Attach an :class:`repro.obs.slo.SLOEngine`: every observed step
+        feeds the per-target ``ew_mae`` stream to its qor specs, the current
+        drift-reference MAE seeds the guard bands, alerting veto-bearing
+        specs block canary promotion, and qor alerts re-arm the rollback
+        guard on that target's most recent promoted adoption."""
+        self.slo = engine
+        for target, snap in self.telemetry.snapshot().items():
+            if not is_tile_key(target) and snap.get("ew_mae") is not None:
+                engine.set_reference(target, float(snap["ew_mae"]))
 
     def warmup(self) -> None:
         """Pre-compile the re-tune scorers (scalar, and per-tile when tile
@@ -410,6 +431,20 @@ class AdaptiveController:
             if buf is not None:
                 buf.add(rec["a_smp"], rec["b_smp"])
         self.step += 1
+        if self.slo is not None:
+            for target, snap in self.telemetry.snapshot().items():
+                if not is_tile_key(target) and snap.get("ew_mae") is not None:
+                    self.slo.observe_qor(target, float(snap["ew_mae"]))
+            for al in self.slo.alerting():
+                # a qor alert on a target whose guarded adoption already
+                # disarmed re-arms the rollback guard on that adoption
+                la = self._last_adoptions.get(al.source)
+                if al.kind != "qor" or al.source in self._guards or la is None:
+                    continue
+                self._emit(f"slo alert [{al.slo}] re-arming rollback guard "
+                           f"on {al.source}")
+                self._arm_guard(al.source, la["version"], la["last_good"],
+                                la["last_good_policy"], la["ev"])
         # rollback guard BEFORE drift: a regressed adoption must roll back
         # to last-good within one sweep, not race a fresh retune for it
         self._check_guards()
@@ -489,18 +524,29 @@ class AdaptiveController:
             last_good = (self.store.current_version()
                          if guarded and self.store is not None else None)
             self.policy.set_config(target, new)
+            veto = None
+            canary_scores = None
             if guarded:
                 if self.store is not None:
                     ev.candidate_version = self.store.publish_candidate(
                         self.policy)
                 ok, canary_scores = self._canary(target, old_idx, best)
+                if ok and self.slo is not None:
+                    # an alerting veto-bearing SLO pre-empts promotion: a
+                    # degraded QoR stream means the holdout score cannot be
+                    # trusted to represent live traffic
+                    veto = self.slo.vetoes_promotion()
+                    if veto is not None:
+                        ok = False
+                        self._emit(f"canary[{target}] promotion VETOED by "
+                                   f"alerting SLO [{veto}]")
                 if not ok:
                     # keep the incumbent serving: revert, drop the candidate
                     self.policy.set_config(target, old)
                     if self.store is not None:
                         self.store.reject_candidate(ev.candidate_version)
                     ev.promoted = False
-                    _CANARY.inc(1, outcome="rejected")
+                    _CANARY.inc(1, outcome="slo_veto" if veto else "rejected")
                 else:
                     _CANARY.inc(1, outcome="promoted")
             snap = self.telemetry.snapshot().get(target)
@@ -523,9 +569,15 @@ class AdaptiveController:
         _RETUNE_WALL.observe(time.perf_counter() - t0)
         _RETUNE_GAIN.set(ev.old_score - ev.new_score, target=target)
         if self.audit is not None:
-            kind = "retune" if ev.promoted else "canary_rejected"
-            extra = ({} if ev.promoted
-                     else dict(canary=canary_scores))
+            kind = ("retune" if ev.promoted
+                    else "slo_veto" if veto is not None
+                    else "canary_rejected")
+            # canary scores ride along on PROMOTED guarded events too: the
+            # holdout incumbent-vs-winner delta is the *realized* gain that
+            # benchmarks/audit_report.py compares against predicted_gain
+            extra = {} if canary_scores is None else dict(canary=canary_scores)
+            if veto is not None:
+                extra["vetoed_by"] = veto
             self.audit.append(
                 kind, step=self.step, target=target, drift=float(drift),
                 old="noswap" if old is None else old.short(),
@@ -576,6 +628,11 @@ class AdaptiveController:
             version=version, last_good=last_good,
             last_good_policy=last_good_policy,
             adopted_step=self.step, steps=0)
+        # kept after the guard disarms: an SLO alert on this target re-arms
+        # the guard on this (most recent) adoption
+        self._last_adoptions[target] = dict(
+            version=version, last_good=last_good,
+            last_good_policy=last_good_policy, ev=ev)
 
     def _check_guards(self) -> None:
         """Post-adoption rollback guard sweep (every observed step, before

@@ -35,7 +35,7 @@ import numpy as np
 from repro import obs
 from repro.core.metrics import ErrorStats, abs_err
 from repro.core.multipliers import AxMult
-from repro.core.swapper import apply_swapper_dyn
+from repro.core.swapper import NO_SWAP_TRIPLE, apply_swapper_dyn
 
 __all__ = [
     "TELEMETRY_SAMPLE",
@@ -77,10 +77,14 @@ TILE_KEY_SUFFIX = "@tiles"
 # psum like their scalar counterparts; the per-tile samples are stored
 # *sample-major* — (TILE_RETUNE_SAMPLE, gm), tiles on the LAST axis — so the
 # shared axis-(-2) concatenation rule of combine_records / fleet.collect
-# extends each tile's sample column instead of inventing new tiles.
+# extends each tile's sample column instead of inventing new tiles.  The
+# per-tile error limbs (tile_err_lo/hi, one uint32 per tile over a
+# TILE_TELEMETRY_SAMPLE-element sample) psum with the same 32-shard
+# headroom (32 * 512 * 0xFFFF < 2^32).
 SUM_FIELDS = ("bits_a", "bits_b", "neg_a", "neg_b", "n",
               "err_lo", "err_hi", "err_cnt",
-              "tile_bits_a", "tile_neg_a", "tile_n")
+              "tile_bits_a", "tile_neg_a", "tile_n",
+              "tile_err_lo", "tile_err_hi")
 MAX_FIELDS = ("err_max",)
 SAMPLE_FIELDS = ("a_smp", "b_smp", "tile_a_smp", "tile_b_smp")
 
@@ -167,7 +171,7 @@ def operand_summary(xq, wq, mult: AxMult, dyn, gate=None) -> dict:
     )
 
 
-def tile_summary(xq, wq, mult: AxMult, gm: int, gate=None) -> dict:
+def tile_summary(xq, wq, mult: AxMult, gm: int, gate=None, dyn=None) -> dict:
     """Per-row-tile telemetry record for one approximate projection call —
     the host-side twin of the kernels' in-reduction ``tile_hist`` output,
     shaped for the adaptive loop rather than the physical block layout.
@@ -189,11 +193,17 @@ def tile_summary(xq, wq, mult: AxMult, gm: int, gate=None) -> dict:
     Samples are laid out (sample, tile) — tiles on the last axis — so the
     fleet's axis-(-2) all-gather/concat rule applies unchanged.  ``gate`` is
     the same traced decimation boolean as :func:`operand_summary`.
+
+    ``dyn`` — the traced live config: a (3,) triple, a (gm, 1, 3) row-tile
+    grid, or None (no-swap).  It selects the per-tile triple the exact
+    error-limb sums (``tile_err_lo``/``tile_err_hi``, one uint32 pair per
+    tile) are computed under, so per-tile QoR attribution sees the error of
+    the policy actually applied to each tile.
     """
     if gate is not None:
         import jax
 
-        impl = lambda: tile_summary(xq, wq, mult, gm)
+        impl = lambda: tile_summary(xq, wq, mult, gm, dyn=dyn)
         shapes = jax.eval_shape(impl)
         zeros = lambda: jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), shapes)
@@ -214,10 +224,36 @@ def tile_summary(xq, wq, mult: AxMult, gm: int, gate=None) -> dict:
     a_i32 = a_t.astype(jnp.int32)
     smp = jax.vmap(lambda v: _flat_sample(v, TILE_RETUNE_SAMPLE))(tiles)
     b_smp = _flat_sample(wq, TILE_RETUNE_SAMPLE)
+
+    # per-tile exact error limbs of the live policy: each tile's A sample
+    # against the shared B sample under the triple configured FOR that tile
+    if dyn is None:
+        trip = jnp.broadcast_to(
+            jnp.asarray(NO_SWAP_TRIPLE, jnp.int32), (g, 3))
+    else:
+        dyn = jnp.asarray(dyn, jnp.int32)
+        if dyn.ndim == 3:
+            # row-tile grid: telemetry tiles and config tiles share the
+            # rowtile_* partition, so tile i observes config row i (clamped
+            # when the call emits fewer tiles than the grid)
+            trip = dyn[:, 0, :][jnp.minimum(jnp.arange(g), dyn.shape[0] - 1)]
+        else:
+            trip = jnp.broadcast_to(dyn.reshape(3), (g, 3))
+    b_i32 = _flat_sample(wq, TILE_TELEMETRY_SAMPLE).astype(jnp.int32)
+
+    def _tile_err(a_row, t):
+        approx = apply_swapper_dyn(mult, a_row, b_i32, t[0], t[1], t[2])
+        e = abs_err(approx, mult.exact_product(a_row, b_i32), mult.signed)
+        return (jnp.sum(e & jnp.uint32(0xFFFF), dtype=jnp.uint32),
+                jnp.sum(e >> jnp.uint32(16), dtype=jnp.uint32))
+
+    tile_err_lo, tile_err_hi = jax.vmap(_tile_err)(a_i32, trip)
     return dict(
         tile_bits_a=jax.vmap(lambda v: _bit_counts(v, bits))(a_i32),  # (g, bits)
         tile_neg_a=jnp.sum((a_i32 < 0), axis=1).astype(jnp.float32),  # (g,)
         tile_n=jnp.full((g,), TILE_TELEMETRY_SAMPLE, jnp.int32),
+        tile_err_lo=tile_err_lo,                                      # (g,)
+        tile_err_hi=tile_err_hi,                                      # (g,)
         tile_a_smp=smp.T,                                             # (S, g)
         tile_b_smp=jnp.broadcast_to(b_smp[:, None],
                                     (TILE_RETUNE_SAMPLE, g)),         # (S, g)
@@ -325,6 +361,7 @@ class TargetTileTelemetry:
     decay: float
     n_steps: int = 0
     bit_probs: Optional[np.ndarray] = None      # (gm, bits+1)
+    ew_mae: Optional[np.ndarray] = None         # (gm,) EW per-tile step MAE
 
     def update(self, rec: Dict[str, np.ndarray]) -> None:
         """``rec`` holds stacked per-call arrays (leading axis = calls of
@@ -335,14 +372,25 @@ class TargetTileTelemetry:
         probs = np.concatenate([bits_a, neg_a[:, None]], axis=-1) / n[:, None]
         if self.bit_probs is None or self.bit_probs.shape != probs.shape:
             self.bit_probs = probs
+            self.ew_mae = None
         else:
             d = self.decay
             self.bit_probs = (1.0 - d) * self.bit_probs + d * probs
+        if "tile_err_lo" in rec:
+            lo = np.sum(np.asarray(rec["tile_err_lo"], np.float64), axis=0)
+            hi = np.sum(np.asarray(rec["tile_err_hi"], np.float64), axis=0)
+            mae = (lo + hi * 65536.0) / n
+            if self.ew_mae is None or self.ew_mae.shape != mae.shape:
+                self.ew_mae = mae
+            else:
+                self.ew_mae = (1.0 - self.decay) * self.ew_mae \
+                    + self.decay * mae
         self.n_steps += 1
 
     def snapshot(self) -> dict:
         return dict(
             bit_probs=None if self.bit_probs is None else self.bit_probs.copy(),
+            ew_mae=None if self.ew_mae is None else self.ew_mae.copy(),
             n_steps=self.n_steps,
         )
 
@@ -459,6 +507,14 @@ class TelemetryQuarantine:
             if k in rec and np.abs(
                     np.asarray(rec[k], np.float64)).max(initial=0.0) > lim:
                 return "bounds"
+        if tile and "tile_err_lo" in rec:
+            tn = np.asarray(rec["tile_n"], np.float64)
+            tn = tn.reshape(-1, tn.shape[-1]).sum(axis=0)
+            for k in ("tile_err_lo", "tile_err_hi"):
+                limb = np.asarray(rec[k], np.float64)
+                limb = limb.reshape(-1, limb.shape[-1]).sum(axis=0)
+                if np.any(limb > tn * 0xFFFF + 0.5):
+                    return "bounds"
         if not tile:
             lo = float(np.sum(np.asarray(rec["err_lo"], np.float64)))
             hi = float(np.sum(np.asarray(rec["err_hi"], np.float64)))

@@ -81,11 +81,13 @@ __all__ = ["ServeConfig", "generate", "token_step", "prefill_one"]
 _PREFILL_WALL = obs.default_registry().histogram(
     "repro_prefill_dispatch_seconds",
     "host wall of generate()'s prefill + first-token sample "
-    "(async dispatch: excludes on-device completion)")
+    "(async dispatch: excludes on-device completion)",
+    buckets=obs.DISPATCH_BUCKETS)
 _DECODE_WALL = obs.default_registry().histogram(
     "repro_decode_dispatch_seconds",
     "host wall of generate()'s decode-loop dispatch by path "
-    "(async dispatch: excludes on-device completion)")
+    "(async dispatch: excludes on-device completion)",
+    buckets=obs.DISPATCH_BUCKETS)
 _DECODE_TOKENS = obs.default_registry().counter(
     "repro_decode_tokens_total",
     "tokens produced by generate() decode loops (slots x steps)")

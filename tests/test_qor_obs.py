@@ -1,0 +1,573 @@
+"""QoR observability (PR 8): per-request error attribution, the SLO
+burn-rate engine, push exporter backends (StatsD / OTLP-JSON golden
+files), bucket-coverage tooling, scrape-vs-snapshot thread races, and
+correlation-id uniqueness across splices and repeated drains.
+"""
+import dataclasses
+import json
+import os
+import socket
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+# ---------------------------------------------------------------------------
+# schema cross-checks: obs stays import-free of the runtime, a test pins
+# the mirrored constants/fields in sync instead
+# ---------------------------------------------------------------------------
+
+def test_tile_key_suffix_matches_runtime():
+    from repro.runtime import telemetry as T
+
+    assert obs.qor.TILE_KEY_SUFFIX == T.TILE_KEY_SUFFIX
+    assert T.tile_key("mlp") == "mlp" + obs.qor.TILE_KEY_SUFFIX
+
+
+def test_step_error_summary_reads_runtime_record_fields():
+    """The attributor's field names must match what the runtime's
+    telemetry records actually carry (err limbs + tile err limbs)."""
+    from repro.runtime import telemetry as T
+
+    assert {"err_lo", "err_hi", "n"} <= set(T.SUM_FIELDS)
+    assert {"tile_err_lo", "tile_err_hi", "tile_n"} <= set(T.SUM_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# step_error_summary / ErrorAttributor unit behaviour
+# ---------------------------------------------------------------------------
+
+def _rec(err_lo, err_hi, n):
+    return dict(err_lo=np.asarray(err_lo, np.uint32),
+                err_hi=np.asarray(err_hi, np.uint32),
+                n=np.asarray(n, np.uint32))
+
+
+def _tile_rec(lo, hi, n):
+    return dict(tile_err_lo=np.asarray(lo, np.uint32),
+                tile_err_hi=np.asarray(hi, np.uint32),
+                tile_n=np.asarray(n, np.uint32))
+
+
+def test_step_error_summary_limb_arithmetic_and_tiles():
+    records = {
+        "mlp": _rec([100, 100], [1, 0], [10, 10]),      # (200+65536)/20
+        "attn": _rec([50], [0], [50]),                  # 1.0
+        "mlp@tiles": _tile_rec([[10, 20], [30, 40]],    # per-call stacked
+                               [[0, 0], [0, 0]],
+                               [[4, 4], [4, 4]]),
+        "skipme": dict(n=np.asarray([1], np.uint32)),   # no limbs: skipped
+    }
+    scalars, tiles = obs.step_error_summary(records)
+    assert scalars["mlp"] == pytest.approx((200 + 65536) / 20)
+    assert scalars["attn"] == pytest.approx(1.0)
+    assert "skipme" not in scalars
+    np.testing.assert_allclose(tiles["mlp"], [(10 + 30) / 8, (20 + 40) / 8])
+
+
+def test_attributor_request_basis_share_and_top_tile():
+    at = obs.ErrorAttributor(top_k=2)
+    at.begin("7#0", 7)
+    step = {"mlp": _rec([300], [0], [100]),             # 3.0/step
+            "attn": _rec([100], [0], [100]),            # 1.0/step
+            "mlp@tiles": _tile_rec([[8, 792]], [[0, 0]], [[100, 100]])}
+    for _ in range(4):
+        at.observe_step(step, live=["7#0"])
+    q = at.finish("7#0")
+    assert q["basis"] == "request" and q["steps"] == 4
+    assert q["ew_mae"]["mlp"] == pytest.approx(3.0)
+    assert q["share"]["mlp"] == pytest.approx(0.75)
+    assert q["share"]["attn"] == pytest.approx(0.25)
+    assert [e["where"] for e in q["top"]] == ["mlp", "attn"]
+    assert q["top"][0]["top_tile"] == 1                 # tile 1 dominates
+    assert q["top"][0]["tile_share"] == pytest.approx(792 / 800)
+    assert q["weighting"] == "step-exposure"
+    assert at.finish("7#0") is None                     # already closed
+
+
+def test_attributor_zero_step_request_falls_back_to_fleet_basis():
+    at = obs.ErrorAttributor()
+    at.begin("0#0", 0)
+    at.observe_step({"mlp": _rec([100], [0], [10])}, live=["0#0"])
+    at.begin("1#1", 1)                 # retires without a live step
+    q = at.finish("1#1")
+    assert q["basis"] == "fleet"
+    assert q["top"][0]["where"] == "mlp"
+    # the exposed request keeps its own basis
+    assert at.finish("0#0")["basis"] == "request"
+
+
+def test_attributor_unknown_and_stale_corrs_dropped():
+    at = obs.ErrorAttributor()
+    at.observe_step({"mlp": _rec([10], [0], [10])}, live=["ghost#9"])
+    assert at.finish("ghost#9") is None                 # never begun
+    assert at.fleet_share() == {"mlp": 1.0}             # fleet still learns
+
+
+# ---------------------------------------------------------------------------
+# SLO engine: burn-rate window edge cases
+# ---------------------------------------------------------------------------
+
+def _spec(**kw):
+    base = dict(name="s", kind="latency", source="e2e", threshold=1.0,
+                objective=0.1, short_window=4, long_window=8,
+                burn_alert=2.0, min_events=4)
+    base.update(kw)
+    return obs.SLOSpec(**base)
+
+
+def test_slo_spec_validation():
+    with pytest.raises(ValueError):
+        _spec(kind="nope")
+    with pytest.raises(ValueError):
+        _spec(objective=0.0)
+    with pytest.raises(ValueError):
+        _spec(short_window=9)          # > long_window
+    with pytest.raises(ValueError):
+        obs.SLOEngine([_spec(), _spec()])   # duplicate names
+
+
+def test_slo_no_alert_below_min_events():
+    eng = obs.SLOEngine([_spec()])
+    for _ in range(3):                 # all bad, but < min_events
+        eng.observe_latency("e2e", 5.0)
+    assert eng.alerting() == []
+    eng.observe_latency("e2e", 5.0)    # 4th event arms it
+    assert [a.slo for a in eng.alerting()] == ["s"]
+
+
+def test_slo_needs_both_windows_burning():
+    """A long window still diluted by good events keeps the alert off even
+    when the short window is saturated (blip suppression)."""
+    eng = obs.SLOEngine([_spec(short_window=2, long_window=8, min_events=2)])
+    for _ in range(6):
+        eng.observe_latency("e2e", 0.1)           # good history
+    eng.observe_latency("e2e", 5.0)
+    eng.observe_latency("e2e", 5.0)
+    bs, bl = eng.burn_rate("s")
+    assert bs == pytest.approx(10.0)              # short: 2/2 bad / 0.1
+    assert bl == pytest.approx(2.5)               # long: 2/8 bad / 0.1
+    assert eng.alerting()                          # both >= 2.0 -> alert
+    eng2 = obs.SLOEngine([_spec(short_window=2, long_window=8, min_events=2,
+                                burn_alert=3.0)])
+    for _ in range(6):
+        eng2.observe_latency("e2e", 0.1)
+    eng2.observe_latency("e2e", 5.0)
+    eng2.observe_latency("e2e", 5.0)
+    assert eng2.alerting() == []                   # long window vetoes
+
+
+def test_slo_alert_edges_audited_and_clears(tmp_path):
+    from repro.obs.audit import AuditLog
+
+    audit = AuditLog(str(tmp_path / "audit.jsonl"))
+    eng = obs.SLOEngine([_spec(short_window=4, long_window=4, min_events=2)],
+                        audit=audit)
+    for _ in range(4):
+        eng.observe_latency("e2e", 5.0)
+    assert eng.alerting()
+    for _ in range(4):                 # recover: window flushes to good
+        eng.observe_latency("e2e", 0.1)
+    assert eng.alerting() == []
+    kinds = [e["kind"] for e in audit.read()]
+    assert kinds == ["slo_alert", "slo_clear"]     # edge-triggered, once each
+
+
+def test_slo_qor_guard_band_uses_reference():
+    eng = obs.SLOEngine([_spec(kind="qor", source="mlp", threshold=1.5,
+                               short_window=2, long_window=2, min_events=1)])
+    eng.set_reference("mlp", 100.0)
+    eng.observe_qor("mlp", 140.0)      # inside 1.5x band: good
+    assert eng.burn_rate("s") == (0.0, 0.0)
+    eng.observe_qor("mlp", 160.0)      # past the band: bad
+    assert eng.burn_rate("s")[0] > 0
+    eng.observe_qor("other", 10 ** 9)  # different target: ignored
+    assert eng.events("s") == 2
+
+
+def test_slo_veto_only_from_veto_bearing_specs():
+    eng = obs.SLOEngine([
+        _spec(name="lat", short_window=2, long_window=2, min_events=1),
+        _spec(name="qor", kind="qor", source="mlp", threshold=0.0,
+              short_window=2, long_window=2, min_events=1,
+              veto_promotion=True)])
+    eng.observe_latency("e2e", 9.0)
+    eng.observe_latency("e2e", 9.0)
+    assert eng.alerting() and eng.vetoes_promotion() is None
+    eng.observe_qor("mlp", 1.0)
+    eng.observe_qor("mlp", 1.0)
+    assert eng.vetoes_promotion() == "qor"
+
+
+# ---------------------------------------------------------------------------
+# exporter backends: golden files + wire behaviour
+# ---------------------------------------------------------------------------
+
+def _golden_registry() -> obs.MetricsRegistry:
+    reg = obs.MetricsRegistry()
+    c = reg.counter("repro_demo_total", "a counter with labels")
+    c.inc(3, mode="wave")
+    c.inc(1.5, mode="token")
+    g = reg.gauge("repro_demo_occupancy", 'quoted "help" with\nnewline')
+    g.set(0.75)
+    h = reg.histogram("repro_demo_seconds", "a histogram",
+                      buckets=(0.1, 1.0, 10.0))
+    h.observe(0.05, path="a")
+    h.observe(0.5, path="a")
+    h.observe(99.0, path="a")
+    return reg
+
+
+def test_statsd_lines_match_golden_file():
+    lines = obs.statsd_lines(_golden_registry())
+    with open(os.path.join(DATA, "metrics_golden.statsd")) as f:
+        assert "\n".join(lines) + "\n" == f.read()
+
+
+def test_otlp_json_matches_golden_file():
+    payload = obs.otlp_json(_golden_registry(), time_unix_nano=0)
+    with open(os.path.join(DATA, "metrics_golden_otlp.json")) as f:
+        assert payload == json.load(f)
+
+
+def test_otlp_bucket_counts_are_non_cumulative():
+    payload = obs.otlp_json(_golden_registry(), time_unix_nano=0)
+    metrics = payload["resourceMetrics"][0]["scopeMetrics"][0]["metrics"]
+    hist = next(m for m in metrics if m["name"] == "repro_demo_seconds")
+    pt = hist["histogram"]["dataPoints"][0]
+    assert pt["bucketCounts"] == ["1", "1", "0", "1"]   # differenced
+    assert pt["explicitBounds"] == [0.1, 1.0, 10.0]     # inf excluded
+    assert pt["count"] == "3"
+
+
+def test_statsd_udp_push_and_mirror(tmp_path):
+    rx = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+    rx.bind(("127.0.0.1", 0))
+    rx.settimeout(5.0)
+    mirror = str(tmp_path / "m.statsd")
+    ex = obs.StatsdExporter("127.0.0.1", rx.getsockname()[1], mirror=mirror,
+                            mtu=120)
+    n = ex.push(_golden_registry())
+    assert n == len(obs.statsd_lines(_golden_registry()))
+    assert ex.packets_sent >= 2        # mtu=120 forces multiple datagrams
+    got = []
+    for _ in range(ex.packets_sent):
+        got.extend(rx.recv(4096).decode().splitlines())
+    rx.close()
+    ex.close()
+    assert got == obs.statsd_lines(_golden_registry())
+    with open(mirror) as f:
+        assert f.read().splitlines() == got
+    assert all(len(line) <= 120 for line in got)
+
+
+def test_statsd_from_spec_and_unreachable_is_silent():
+    ex = obs.StatsdExporter.from_spec("127.0.0.1:1")    # nothing listens
+    assert ex.addr == ("127.0.0.1", 1)
+    assert ex.push(_golden_registry()) > 0              # no raise
+    ex.close()
+
+
+def test_otlp_file_push_appends_jsonl(tmp_path):
+    path = str(tmp_path / "otlp.jsonl")
+    ex = obs.OtlpJsonExporter(path)
+    assert ex.push(_golden_registry(), time_unix_nano=1) == 1
+    assert ex.push(_golden_registry(), time_unix_nano=2) == 1
+    lines = open(path).read().splitlines()
+    assert len(lines) == 2
+    p0 = json.loads(lines[0])
+    assert p0["resourceMetrics"][0]["resource"]["attributes"][0][
+        "value"]["stringValue"] == "repro-swapper"
+
+
+def test_otlp_http_collector_down_degrades(tmp_path):
+    ex = obs.OtlpJsonExporter("http://127.0.0.1:9/v1/metrics", timeout_s=0.2)
+    assert ex.push(_golden_registry()) == 0
+    assert ex.errors == 1              # counted, not raised
+
+
+def test_push_all_totals_units(tmp_path):
+    ex1 = obs.OtlpJsonExporter(str(tmp_path / "a.jsonl"))
+    ex2 = obs.StatsdExporter("127.0.0.1", 1)
+    total = obs.push_all([ex1, ex2], _golden_registry())
+    assert total == 1 + len(obs.statsd_lines(_golden_registry()))
+    ex2.close()
+
+
+# ---------------------------------------------------------------------------
+# percentiles + bucket coverage
+# ---------------------------------------------------------------------------
+
+def test_interpolated_percentile_and_resolution():
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("w", "h", buckets=(1.0, 2.0, 4.0))
+    for _ in range(100):
+        h.observe(1.5)                 # all in the (1, 2] bucket
+    assert h.percentile(0.5) == 2.0                      # bucket ceiling
+    assert h.percentile(0.5, interpolate=True) == pytest.approx(1.5)
+    assert h.percentile_resolution(0.5) == pytest.approx(1.0)
+    h.observe(100.0)                   # +Inf bucket
+    assert h.percentile(1.0, interpolate=True) == 4.0    # clamped to edge
+    assert h.percentile_resolution(1.0) == float("inf")
+
+
+def test_bucket_percentile_offline_twin():
+    samples = [0.5, 1.5, 1.5, 3.0]
+    v, res = obs.bucket_percentile(samples, (1.0, 2.0, 4.0), 0.5)
+    assert 1.0 <= v <= 2.0 and res == pytest.approx(1.0)
+    assert obs.bucket_percentile([], (1.0,), 0.5) == (None, None)
+
+
+def test_bucket_coverage_flags_inf_heavy_series():
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("cov", "h", buckets=(1.0, 2.0))
+    for _ in range(90):
+        h.observe(0.5, path="ok")
+    for _ in range(80):
+        h.observe(0.5, path="bad")
+    for _ in range(20):
+        h.observe(9.0, path="bad")     # 20% beyond the top edge
+    findings = reg.bucket_coverage(threshold=0.05, min_count=20)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f["name"] == "cov" and f["inf_fraction"] == pytest.approx(0.2)
+    with pytest.warns(UserWarning, match="cov"):
+        reg.check_bucket_coverage(threshold=0.05, min_count=20)
+    # sparse series never flag (a lone cold-compile outlier is fine)
+    reg2 = obs.MetricsRegistry()
+    h2 = reg2.histogram("cov2", "h", buckets=(1.0,))
+    h2.observe(9.0)
+    assert reg2.bucket_coverage(min_count=20) == []
+
+
+def test_tuned_families_cover_recorded_serving_walls():
+    """The BENCH-derived bucket families must cover the distributions they
+    were tuned from (smoke-container p99s sit inside the top edge)."""
+    assert max(obs.TTFT_BUCKETS) >= 12.0
+    assert max(obs.E2E_BUCKETS) >= 18.0
+    assert max(obs.DISPATCH_BUCKETS) >= 5.0
+    for fam in (obs.TTFT_BUCKETS, obs.E2E_BUCKETS, obs.DISPATCH_BUCKETS,
+                obs.QOR_MAE_BUCKETS):
+        assert list(fam) == sorted(fam) and len(set(fam)) == len(fam)
+
+
+# ---------------------------------------------------------------------------
+# scrape + snapshot under concurrent metric writes (daemon-thread race)
+# ---------------------------------------------------------------------------
+
+def test_scrape_and_snapshot_race_with_writers(tmp_path):
+    reg = obs.MetricsRegistry()
+    c = reg.counter("race_total", "h")
+    h = reg.histogram("race_seconds", "h", buckets=(0.1, 1.0))
+    stop = threading.Event()
+
+    def writer(i):
+        k = 0
+        while not stop.is_set():
+            c.inc(1, worker=str(i))
+            h.observe(0.05 if k % 2 else 5.0, worker=str(i))
+            k += 1
+
+    threads = [threading.Thread(target=writer, args=(i,), daemon=True)
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    path = str(tmp_path / "race.jsonl")
+    try:
+        with obs.start_metrics_server(0, reg, host="127.0.0.1") as srv:
+            url = f"http://127.0.0.1:{srv.port}/metrics"
+            for _ in range(20):
+                body = urllib.request.urlopen(url, timeout=10).read().decode()
+                assert "race_total" in body
+                obs.write_snapshot(path, reg, run="race")
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+    # every snapshot line parses and is internally consistent: cumulative
+    # bucket counts monotone, +Inf bucket == count (no torn histogram rows)
+    lines = [json.loads(s) for s in open(path).read().splitlines()]
+    assert len(lines) == 20
+    for snap in lines:
+        for series in snap["metrics"]["race_seconds"]["series"].values():
+            counts = [n for _, n in series["buckets"]]
+            assert counts == sorted(counts)
+            assert counts[-1] == series["count"]
+
+
+# ---------------------------------------------------------------------------
+# correlation ids + attribution through the real scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_serve():
+    import jax
+
+    import repro.configs as CFG
+    from repro.configs.base import AxPolicy
+    from repro.models import init_params
+
+    cfg = CFG.reduced(CFG.ARCHS["qwen2-72b"])
+    cfg = dataclasses.replace(
+        cfg, n_layers=2, ax=AxPolicy(mult_name="mul8s_trunc0_4",
+                                     backend="mxu"))
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _batcher(cfg, params, **kw):
+    import repro.runtime as R
+    from repro.fleet import BatcherConfig, ContinuousBatcher
+
+    ctrl = R.AdaptiveController(
+        R.SwapPolicy.from_ax_policy(cfg.ax), targets=cfg.ax.targets,
+        cfg=R.AdaptiveConfig(min_observe_steps=10 ** 6,
+                             tile_rows=kw.pop("tile_rows", 0)))
+    return ContinuousBatcher(
+        params, cfg,
+        BatcherConfig(n_slots=2, prompt_buckets=(8,), new_token_bucket=4,
+                      token_granular=True, **kw),
+        adaptive=ctrl)
+
+
+def _submit_n(bat, cfg, n, rng, max_new=3):
+    from repro.fleet import Request
+
+    for rid in range(n):
+        bat.submit(Request(rid, rng.integers(0, cfg.vocab, 6),
+                           max_new=max_new))
+
+
+def test_corr_ids_unique_across_splices_and_drains(tiny_serve):
+    """rids recur across drains (and splice mid-flight within one); the
+    arrival-stamped correlation ids must never collide."""
+    cfg, params = tiny_serve
+    bat = _batcher(cfg, params)
+    rng = np.random.default_rng(0)
+    _submit_n(bat, cfg, 5, rng)        # 5 requests on 2 slots: splices
+    done1 = bat.run()
+    _submit_n(bat, cfg, 5, rng)        # SAME rids, second drain
+    done2 = bat.run()
+    assert bat.stats["splices"] >= 1
+    corrs = [c.corr for c in done1 + done2]
+    assert all(c is not None for c in corrs)
+    assert len(set(corrs)) == len(corrs) == 10
+    rids = {c.rid for c in done1 + done2}
+    assert rids == set(range(5))       # rid reuse is real, corr saved us
+
+
+def test_every_completion_carries_qor_summary(tiny_serve):
+    cfg, params = tiny_serve
+    bat = _batcher(cfg, params, tile_rows=2)
+    rng = np.random.default_rng(1)
+    _submit_n(bat, cfg, 4, rng)
+    done = bat.run()
+    assert len(done) == 4
+    for c in done:
+        assert c.qor is not None and c.qor["corr"] == c.corr
+        assert c.qor["basis"] == "request" and c.qor["steps"] >= 1
+        tops = c.qor["top"]
+        assert tops and abs(sum(e["share"] for e in tops) - 1.0) < 1e-6
+        assert all("top_tile" in e and 0.0 < e["tile_share"] <= 1.0
+                   for e in tops)
+        # per-target tile vectors: list-of-float, tile count > 1
+        assert all(len(v) > 1 for v in c.qor["tiles"].values())
+    assert bat.qor.describe().startswith("qor finished=4")
+
+
+def test_one_token_requests_get_fleet_basis(tiny_serve):
+    cfg, params = tiny_serve
+    bat = _batcher(cfg, params)
+    rng = np.random.default_rng(2)
+    _submit_n(bat, cfg, 2, rng, max_new=3)     # build fleet profile
+    bat.run()
+    _submit_n(bat, cfg, 2, rng, max_new=1)     # decode 1 step then retire
+    done = bat.run()
+    for c in done:
+        assert c.qor is not None
+        assert c.qor["basis"] in ("request", "fleet")
+        assert c.qor["top"]
+
+
+def test_wave_mode_carries_corr_but_no_qor(tiny_serve):
+    from repro.fleet import BatcherConfig, ContinuousBatcher, Request
+
+    cfg, params = tiny_serve
+    bat = ContinuousBatcher(
+        params, cfg, BatcherConfig(n_slots=2, prompt_buckets=(8,),
+                                   new_token_bucket=4))
+    rng = np.random.default_rng(3)
+    bat.submit(Request(0, rng.integers(0, cfg.vocab, 6), max_new=3))
+    done = bat.run()
+    assert done[0].corr is not None
+    assert done[0].qor is None         # the oracle stays uninstrumented
+
+
+def test_latency_summary_bucketed_twins(tiny_serve):
+    cfg, params = tiny_serve
+    bat = _batcher(cfg, params)
+    rng = np.random.default_rng(4)
+    _submit_n(bat, cfg, 3, rng)
+    bat.run()
+    s = bat.latency_summary()
+    for k in ("e2e_p50", "e2e_p99", "ttft_p50", "ttft_p99"):
+        assert k in s                  # exact order statistics stay
+        assert f"{k}_bucketed" in s and f"{k}_resolution" in s
+        if s[f"{k}_resolution"] != float("inf"):
+            # the bucket read sits within one stated resolution of exact
+            assert abs(s[f"{k}_bucketed"] - s[k]) <= s[f"{k}_resolution"]
+
+
+# ---------------------------------------------------------------------------
+# SLO engine wired to scheduler + controller (veto + re-arm paths)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_feeds_latency_slos(tiny_serve):
+    cfg, params = tiny_serve
+    bat = _batcher(cfg, params)
+    eng = obs.SLOEngine(obs.default_serving_slos())
+    bat.attach_slo(eng)
+    rng = np.random.default_rng(5)
+    _submit_n(bat, cfg, 3, rng)
+    bat.run()
+    assert eng.events("ttft") == 3 and eng.events("e2e") == 3
+
+
+def test_controller_slo_veto_blocks_canary_promotion(tmp_path):
+    import repro.runtime as R
+    from repro.fleet import PolicyStore
+
+    store = PolicyStore(str(tmp_path))
+    ctrl = R.AdaptiveController(
+        R.SwapPolicy("mul8u_trunc0_4", configs={"*": None}),
+        targets=("stream",),
+        cfg=R.AdaptiveConfig(decay=0.4, drift_threshold=10.0,
+                             min_observe_steps=1, cooldown_steps=0,
+                             buffer_size=1024, canary=True),
+        store=store)
+    ctrl.warmup()
+    ctrl.resume_from_store()
+    eng = obs.SLOEngine([obs.SLOSpec(
+        name="qor_stream", kind="qor", source="stream", threshold=0.0,
+        objective=0.1, short_window=4, long_window=4, min_events=2,
+        veto_promotion=True)], audit=ctrl.audit)
+    ctrl.attach_slo(eng)
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        ctrl.observe_operands("stream", rng.integers(128, 256, 2048),
+                              rng.integers(0, 256, 2048))
+    assert eng.vetoes_promotion() == "qor_stream"
+    ev = ctrl.retune("stream")
+    assert ev.promoted is False
+    assert ctrl.policy.lookup("stream") is None          # incumbent kept
+    assert store.current_version() == 1                  # CURRENT untouched
+    assert store.candidate_version() is None             # candidate dropped
+    events = ctrl.audit.read()
+    veto = [e for e in events if e["kind"] == "slo_veto"]
+    assert veto and veto[0]["vetoed_by"] == "qor_stream"
+    assert any(e["kind"] == "slo_alert" for e in events)
